@@ -1,0 +1,46 @@
+"""§Roofline report: read the dry-run JSON records and print the per-
+(arch x shape x mesh) three-term roofline table with dominant bottleneck,
+useful-compute ratio, and roofline fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+__all__ = ["run", "load_records"]
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dirname: str = DRYRUN_DIR, tag: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        if tag is None or r.get("tag") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(dirname: str = DRYRUN_DIR, tag: str | None = None):
+    recs = load_records(dirname, tag)
+    if not recs:
+        print(f"table=roofline  (no dry-run records in {dirname} — run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return []
+    print("table=roofline  (per arch x shape x mesh; seconds per step)")
+    print("arch,shape,mesh,tag,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for r in recs:
+        t = r["roofline"]
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        print(f"{r['arch']},{r['shape']},{mesh},{r.get('tag','')},"
+              f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
+              f"{t['collective_s']:.4g},{t['dominant']},"
+              f"{t['useful_ratio']:.3f},{t['roofline_fraction']:.4f}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Paper Figs 1-6 & 13-14: performance profiles of FFT backends vs N.
+
+The paper compares FFTW-2.1.5 / FFTW-3.3.7 / Intel MKL FFT; the JAX-native
+analogues here are three 2-D DFT implementations with genuinely different
+size-sensitivity:
+
+  * xla_fft   — jnp.fft.fft2 (XLA's PocketFFT path; Bluestein on non-smooth N)
+  * stockham  — our radix-2 row-column pipeline (pow2 only; NaN elsewhere)
+  * czt_pow2  — chirp-Z through pow2 FFTs (smooth cost at every N)
+
+Reports the paper's comparison stats: average speed, peak speed (+argmax),
+width-of-variation (Eq. 1), and #sizes where each backend beats another.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_SWEEP, N_VALLEYS, mflops_of, signal, time_fn
+from repro.core.pfft import czt_dft
+from repro.fft.fft2d import fft2d_rowcol
+
+__all__ = ["run"]
+
+
+def _czt2(m):
+    return czt_dft(czt_dft(m).T).T
+
+
+BACKENDS = {
+    "xla_fft": jax.jit(jnp.fft.fft2),
+    "stockham": jax.jit(lambda m: fft2d_rowcol(m, use_stockham=True)),
+    "czt_pow2": jax.jit(_czt2),
+}
+
+
+def variation_width(speeds: np.ndarray) -> float:
+    """Paper Eq. 1: max |s1-s2|/min(s1,s2) over subsequent local extrema."""
+    s = speeds[np.isfinite(speeds)]
+    if len(s) < 2:
+        return 0.0
+    return float(np.max(np.abs(np.diff(s)) / np.minimum(s[:-1], s[1:])) * 100)
+
+
+def run(ns=None, quick: bool = False):
+    ns = ns or (N_SWEEP[:8] if quick else sorted(set(N_SWEEP) | set(N_VALLEYS)))
+    rows = []
+    for n in ns:
+        m = signal(n)
+        entry = {"n": n}
+        for name, fn in BACKENDS.items():
+            if name == "stockham" and (n & (n - 1)):
+                entry[name] = float("nan")
+                continue
+            try:
+                t = time_fn(fn, m, eps=0.15, max_reps=8, max_t=3.0)
+                entry[name] = mflops_of(n, t)
+            except Exception:
+                entry[name] = float("nan")
+        rows.append(entry)
+
+    print("table=speed_functions  (paper Figs 1-6, 13-14)")
+    print("n," + ",".join(BACKENDS))
+    for e in rows:
+        print(f"{e['n']}," + ",".join(f"{e[b]:.1f}" for b in BACKENDS))
+
+    stats = {}
+    for b in BACKENDS:
+        sp = np.array([e[b] for e in rows])
+        ok = np.isfinite(sp)
+        stats[b] = {
+            "avg_mflops": float(np.nanmean(sp)),
+            "peak_mflops": float(np.nanmax(sp)),
+            "peak_n": int(np.array(ns)[ok][np.nanargmax(sp[ok])]),
+            "variation_width_pct": variation_width(sp),
+        }
+    a, c = stats["xla_fft"], stats["czt_pow2"]
+    wins = sum(1 for e in rows
+               if np.isfinite(e["czt_pow2"]) and e["czt_pow2"] > e["xla_fft"])
+    for b, s in stats.items():
+        print(f"stat,{b},avg={s['avg_mflops']:.0f},peak={s['peak_mflops']:.0f}"
+              f"@N={s['peak_n']},variation={s['variation_width_pct']:.0f}%")
+    print(f"stat,czt_beats_xla_on,{wins},of,{len(rows)}")
+    return rows, stats
+
+
+if __name__ == "__main__":
+    run()

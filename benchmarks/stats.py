@@ -1,0 +1,49 @@
+"""Statistical methodology (paper Alg. 8): repeat until the sample mean
+lies in the 95% confidence interval with the requested precision, via
+Student's t-test."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+try:
+    from scipy import stats as _sstats
+except Exception:  # pragma: no cover
+    _sstats = None
+
+__all__ = ["mean_using_ttest"]
+
+
+def mean_using_ttest(app: Callable[[], None], *, min_reps: int = 3,
+                     max_reps: int = 30, max_t: float = 60.0,
+                     cl: float = 0.95, eps: float = 0.05) -> dict:
+    """Run ``app`` repeatedly; stop when CI/mean < eps (or rep/time caps).
+
+    Returns {mean, reps, eps_achieved, elapsed} — the paper's MeanUsingTtest
+    with the same three stop conditions."""
+    obs: list[float] = []
+    elapsed = 0.0
+    eps_out = float("inf")
+    while len(obs) < max_reps:
+        t0 = time.perf_counter()
+        app()
+        dt = time.perf_counter() - t0
+        obs.append(dt)
+        elapsed += dt
+        if len(obs) >= min_reps:
+            arr = np.asarray(obs)
+            sd = arr.std(ddof=1)
+            if _sstats is not None and sd > 0:
+                half = float(_sstats.t.ppf(cl, len(obs) - 1)) * sd / np.sqrt(len(obs))
+            else:
+                half = 2.0 * sd / np.sqrt(len(obs))
+            eps_out = half / arr.mean()
+            if eps_out < eps:
+                break
+            if elapsed > max_t:
+                break
+    return {"mean": float(np.mean(obs)), "reps": len(obs),
+            "eps_achieved": float(eps_out), "elapsed": elapsed}

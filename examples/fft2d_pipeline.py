@@ -1,0 +1,36 @@
+"""Distributed 2-D FFT pipeline on a device mesh — the paper's algorithm
+with the transpose steps realised as all_to_all collectives (TPU-pod form).
+
+Runs on CPU with 8 placeholder devices; the same code drives a v5e pod.
+
+Run:  PYTHONPATH=src python examples/fft2d_pipeline.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pfft_dist import make_pfft2_fn
+from repro.launch.mesh import make_local_mesh
+
+N = 256
+mesh = jax.make_mesh((8,), ("fft",))
+
+rng = np.random.default_rng(0)
+sig = (rng.standard_normal((N, N)) + 1j * rng.standard_normal((N, N))
+       ).astype(np.complex64)
+sig = jnp.asarray(sig)
+
+for kw, label in [({}, "plain"),
+                  ({"padded": "czt"}, "czt-padded (exact)"),
+                  ({"use_stockham": True}, "stockham local FFT")]:
+    fn = make_pfft2_fn(mesh, N, "fft", **kw)
+    out = fn(sig)
+    err = float(jnp.max(jnp.abs(out - jnp.fft.fft2(sig))))
+    print(f"distributed pfft2 [{label:24s}] max_err={err:.2e} "
+          f"shards={len(out.sharding.device_set)}")
+print("collective transpose pattern:",
+      "row FFT -> all_to_all -> col FFT -> all_to_all")

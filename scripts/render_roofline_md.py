@@ -1,0 +1,78 @@
+"""Render the §Roofline markdown table from dry-run JSON records into
+EXPERIMENTS.md (replaces the <!-- ROOFLINE_TABLE --> marker)."""
+
+import glob
+import json
+import os
+import sys
+
+DIR = "experiments/dryrun"
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def load(tag):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DIR, f"*__{tag}.json"))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return out
+
+
+def fmt(x, digits=4):
+    return f"{x:.{digits}g}"
+
+
+def main():
+    analysis = load("analysis")
+    baseline = load("baseline")
+    rows = []
+    # roofline table is single-pod per the brief; one row per runnable cell
+    cells = sorted({k[:2] for k in baseline if not k[2]})
+    for arch, shape in cells:
+        a = analysis.get((arch, shape, False))
+        b = baseline.get((arch, shape, False))
+        src = a or b
+        t = src["roofline"]
+        method = "analysis" if a else "scanned*"
+        ssm_note = "†" if (arch in ("xlstm_125m", "zamba2_7b")
+                           and a is not None) else ""
+        rows.append(
+            f"| {arch} | {shape} | {fmt(t['compute_s'])} | {fmt(t['memory_s'])} "
+            f"| {fmt(t['collective_s'])} | {t['dominant']} "
+            f"| {fmt(t['useful_ratio'], 3)}{ssm_note} "
+            f"| {fmt(t['roofline_fraction'], 3)} | {method} |")
+
+    hdr = (
+        "Single-pod (16×16 = 256 chips), per-device seconds per step.  "
+        "`useful` = MODEL_FLOPS / HLO_FLOPs; `fraction` = MODEL_FLOPS / "
+        "(bound_term × 256 × 197 TFLOP/s).\n\n"
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| useful | fraction | method |\n"
+        "|---|---|---|---|---|---|---|---|---|\n")
+    foot = (
+        "\n\\* scanned = analysis lowering unavailable (compile timeout); "
+        "scan bodies counted once — terms are lower bounds for these rows.\n"
+        "† SSM/xLSTM inner chunk/time scans remain scans even in analysis "
+        "mode (unrolling 512–32k trips is infeasible); their flops are "
+        "undercounted, which can push `useful` above 1 — the recurrence "
+        "contribution is excluded from HLO_FLOPs but present in "
+        "MODEL_FLOPS.\n\n"
+        "**One-line bottleneck summary per dominant term**: decode cells "
+        "are memory/collective-bound at trivial fractions (batch-1 or "
+        "128-token steps on 256 chips are inherently launch-bound — batch "
+        "or multi-tenant packing is the lever); prefill/train cells are "
+        "memory-term-bound under the pre-fusion bytes metric with the "
+        "collective term next — seq_shard (Q3/D3) is the collective "
+        "lever, grad reduce-scatter the next one (§Perf).\n")
+    table = hdr + "\n".join(rows) + foot
+
+    md = open("EXPERIMENTS.md").read()
+    assert MARK in md
+    md = md.replace(MARK, table, 1)
+    open("EXPERIMENTS.md", "w").write(md)
+    print(f"rendered {len(rows)} rows "
+          f"({sum(1 for a, s in cells if (a, s, False) in analysis)} analysis)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""One config module per assigned architecture (FULL = exact assigned
+config; SMOKE = reduced same-family config for CPU tests), plus the paper's
+own 2-D FFT workload configs in ``paper_fft``."""
+
+from repro.configs.base import (ArchConfig, MoECfg, MLACfg, SSMCfg, XLSTMCfg,
+                                HybridCfg, ShapeCfg, SHAPES, TrainCfg)
+
+__all__ = ["ArchConfig", "MoECfg", "MLACfg", "SSMCfg", "XLSTMCfg",
+           "HybridCfg", "ShapeCfg", "SHAPES", "TrainCfg"]

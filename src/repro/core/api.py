@@ -1,0 +1,92 @@
+"""Plan-style user API (mirrors fftw's plan/execute lifecycle).
+
+    plan = plan_pfft(n=4096, fpms=fpms, method="fpm-pad", eps=0.05)
+    out  = plan.execute(signal)     # jit-compiled, reusable
+
+The plan captures everything host-side (partition d, pad lengths) once, so
+``execute`` is a pure jitted function — the analogue of building an fftw
+plan once and calling ``fftw_execute`` repeatedly (the only thread-safe op,
+as the paper notes in §IV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.fpm import FPMSet
+from repro.core.padding import determine_pad_length
+from repro.core.partition import PartitionResult, lb_partition, partition_rows
+from repro.core.pfft import _pfft_limb, czt_dft, _segments
+from repro.core.padding import smooth_candidates
+
+Method = Literal["lb", "fpm", "fpm-pad", "fpm-czt"]
+
+__all__ = ["PfftPlan", "plan_pfft"]
+
+
+@dataclasses.dataclass
+class PfftPlan:
+    n: int
+    method: Method
+    partition: PartitionResult
+    pad_lengths: np.ndarray | None
+    _fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def execute(self, m: jnp.ndarray) -> jnp.ndarray:
+        if m.shape != (self.n, self.n):
+            raise ValueError(f"plan is for {self.n}x{self.n}, got {m.shape}")
+        return self._fn(m)
+
+    @property
+    def d(self) -> np.ndarray:
+        return self.partition.d
+
+
+def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
+              method: Method = "fpm", eps: float = 0.05,
+              use_stockham: bool = False) -> PfftPlan:
+    if method == "lb":
+        if p is None:
+            raise ValueError("method='lb' requires p")
+        part = lb_partition(n, p)
+        pads = None
+    else:
+        if fpms is None:
+            raise ValueError(f"method={method!r} requires fpms")
+        part = partition_rows(n, fpms, eps)
+        if method == "fpm-pad":
+            pads = np.array([determine_pad_length(fpms[i], int(part.d[i]), n)
+                             for i in range(fpms.p)], dtype=np.int64)
+        elif method == "fpm-czt":
+            cands = smooth_candidates(2 * n - 1, limit_ratio=2.0)
+            pads = np.array(
+                [int(cands[int(np.argmin([fpms[i].time_at(max(int(part.d[i]), 1), int(c))
+                                          for c in cands]))])
+                 for i in range(fpms.p)], dtype=np.int64)
+        else:
+            pads = None
+
+    if method == "fpm-czt":
+        segs = _segments(part.d)
+        lens = pads
+
+        def raw(m):
+            def phase(mat):
+                outs = [czt_dft(mat[lo:hi], int(lens[i]))
+                        for i, (lo, hi) in enumerate(segs) if hi > lo]
+                return jnp.concatenate(outs, axis=0)
+            return phase(phase(m).T).T
+    else:
+        d = part.d
+        pl = pads
+
+        def raw(m):
+            return _pfft_limb(m, d, pad_lengths=pl, use_stockham=use_stockham)
+
+    return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
+                    _fn=jax.jit(raw))

@@ -1,0 +1,136 @@
+"""Distributed PFFT on a jax device mesh (the TPU-pod adaptation).
+
+The paper's 4-step pipeline maps onto a 1-D pencil decomposition over a mesh
+axis: each device holds a contiguous block of rows; the paper's explicit
+transpose steps become ``all_to_all`` collectives (this is the dominant
+roofline term at pod scale — see EXPERIMENTS.md §Roofline).
+
+    rows sharded (N/p, N) --local row FFT-->
+    --all_to_all (split cols, concat rows) + local transpose-->
+    cols sharded (N/p, N) --local row FFT (== column FFT)-->
+    --all_to_all back + local transpose--> rows sharded, transformed.
+
+Padding adaptation on TPU: the *local FFT length* is padded to an FPM-chosen
+fast size (smooth / lane-aligned).  Two variants:
+
+  * ``padded='crop'``  — the paper's PFFT-FPM-PAD semantics (padded-signal
+    DFT cropped to N bins; spectral interpolation);
+  * ``padded='czt'``   — exact N-point DFT via Bluestein at the padded
+    length (beyond-paper, exactness preserved).
+
+Uneven (HPOPTA) distributions across *heterogeneous device groups* are
+realised block-ragged: the row axis is split into ``p`` equal SPMD shards,
+but the FPM distribution decides how many of each shard's rows are real
+work vs. masked padding; see ``ragged_row_layout``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.padding import pad_to_smooth
+from repro.core.pfft import czt_dft
+from repro.fft.fft2d import fft_rows
+
+__all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout"]
+
+
+def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
+                 padded: str | None, pad_len: int, use_stockham: bool,
+                 backend: str | None = None) -> jnp.ndarray:
+    """One (row FFT -> distributed transpose) phase on a local block.
+
+    block: (n_loc, N) — this device's rows.  Returns (n_loc, N): this
+    device's block of the *transposed, row-transformed* matrix.
+    """
+    if padded == "czt":
+        block = czt_dft(block, pad_len)
+    elif padded == "crop" and pad_len > n:
+        block = jnp.pad(block, ((0, 0), (0, pad_len - n)))
+        block = fft_rows(block, use_stockham=use_stockham,
+                         backend=backend)[:, :n]
+    else:
+        block = fft_rows(block, use_stockham=use_stockham, backend=backend)
+    # Distributed transpose: exchange column panels between devices, then
+    # transpose locally.  tiled all_to_all: split axis 1 into p panels, each
+    # device keeps panel j from every peer, concatenated along axis 0.
+    gathered = jax.lax.all_to_all(block, axis_name, split_axis=1, concat_axis=0,
+                                  tiled=True)  # (N, N/p)
+    return gathered.T  # (N/p, N): a row-block of M^T
+
+
+def pfft2_distributed(
+    m: jnp.ndarray,
+    mesh: Mesh,
+    axis_name: str = "fft",
+    *,
+    padded: Literal["crop", "czt", None] = None,
+    pad_len: int | None = None,
+    use_stockham: bool = False,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Distributed 2-D DFT of a square matrix sharded by rows over ``axis_name``.
+
+    ``pad_len``: FPM-chosen local FFT length (defaults to the model-free
+    smooth size for 'crop', next pow2 >= 2N-1 for 'czt').
+    """
+    n = m.shape[0]
+    p = mesh.shape[axis_name]
+    if n % p:
+        raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    if pad_len is None:
+        if padded == "crop":
+            pad_len = pad_to_smooth(n)
+        elif padded == "czt":
+            pad_len = 1 << int(np.ceil(np.log2(2 * n - 1)))
+        else:
+            pad_len = n
+
+    spec_rows = P(axis_name, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,
+        check_rep=False,
+    )
+    def _run(block):
+        # Phase 1: row FFTs + distributed transpose.
+        block = _local_phase(block, axis_name, n, padded=padded,
+                             pad_len=pad_len, use_stockham=use_stockham,
+                             backend=backend)
+        # Phase 2: (original-)column FFTs + distributed transpose back.
+        block = _local_phase(block, axis_name, n, padded=padded,
+                             pad_len=pad_len, use_stockham=use_stockham,
+                             backend=backend)
+        return block
+
+    return _run(m)
+
+
+def make_pfft2_fn(mesh: Mesh, n: int, axis_name: str = "fft", **kw):
+    """jit-compiled distributed 2-D DFT closed over a mesh (sharded in/out)."""
+    sharding = NamedSharding(mesh, P(axis_name, None))
+    fn = functools.partial(pfft2_distributed, mesh=mesh, axis_name=axis_name, **kw)
+    return jax.jit(fn, in_shardings=(sharding,), out_shardings=sharding)
+
+
+def ragged_row_layout(d: np.ndarray, p: int) -> tuple[int, np.ndarray]:
+    """Block-ragged realisation of an uneven HPOPTA distribution under SPMD.
+
+    SPMD shards must be equal-sized, so each of the ``p`` groups gets a
+    buffer of ``max(d)`` rows; group i's valid-row count is d[i] and the
+    remainder is masked padding.  Returns (rows_per_shard, valid_counts).
+    The waste max(d)*p - sum(d) is the price of SPMD on *homogeneous* pods —
+    on heterogeneous fleets (where d is uneven because speeds genuinely
+    differ) the time saved dominates; see DESIGN.md §2.
+    """
+    d = np.asarray(d, dtype=np.int64)
+    if len(d) != p:
+        raise ValueError("distribution length must equal group count")
+    return int(d.max()), d.copy()

@@ -1,0 +1,4 @@
+from repro.data.pipeline import SyntheticTokenPipeline, make_batch
+from repro.data.specs import input_specs
+
+__all__ = ["SyntheticTokenPipeline", "make_batch", "input_specs"]

@@ -1,0 +1,86 @@
+"""Deterministic synthetic data pipeline.
+
+Produces per-step batches keyed by (seed, step, host_shard) so that a
+restarted / re-sharded job regenerates exactly the same global stream —
+this is what makes checkpoint-restart and elastic re-sharding exact (the
+pipeline cursor is just the step counter, saved with the checkpoint).
+
+The "dataset" is a reproducible integer stream with enough structure for a
+~100M-param model to visibly learn (a noisy Markov chain over the vocab),
+so the quickstart example shows a real falling loss curve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["SyntheticTokenPipeline", "make_batch"]
+
+
+def _markov_tokens(rng: np.random.Generator, batch: int, seq: int, vocab: int):
+    """Noisy Markov stream: next = (3*cur + noise) mod vocab."""
+    x = np.empty((batch, seq + 1), np.int32)
+    x[:, 0] = rng.integers(0, vocab, batch)
+    noise = rng.integers(0, 7, (batch, seq))
+    for t in range(seq):
+        x[:, t + 1] = (3 * x[:, t] + noise[:, t]) % vocab
+    return x
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, *, seed: int, step: int,
+               host_shard: int = 0, n_hosts: int = 1):
+    """One global-batch slice for this host.  Deterministic in (seed, step)."""
+    if batch % n_hosts:
+        raise ValueError(f"global batch {batch} not divisible by hosts {n_hosts}")
+    b_local = batch // n_hosts
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step, host_shard]))
+    if cfg.modality == "audio":
+        feats = rng.standard_normal((b_local, seq, cfg.d_model)).astype(np.float32)
+        mask = rng.random((b_local, seq)) < 0.08
+        targets = rng.integers(0, cfg.vocab, (b_local, seq)).astype(np.int32)
+        targets = np.where(mask, targets, -1)  # loss only on masked frames
+        return {"features": jnp.asarray(feats), "mask": jnp.asarray(mask),
+                "targets": jnp.asarray(targets)}
+    if cfg.modality == "vision":
+        P = cfg.n_prefix_embeds
+        s_text = seq - P
+        toks = _markov_tokens(rng, b_local, s_text, cfg.vocab)
+        patches = rng.standard_normal((b_local, P, cfg.d_model)).astype(np.float32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "patches": jnp.asarray(patches),
+                "targets": jnp.asarray(toks[:, 1:])}
+    toks = _markov_tokens(rng, b_local, seq, cfg.vocab)
+    return {"tokens": jnp.asarray(toks[:, :-1]), "targets": jnp.asarray(toks[:, 1:])}
+
+
+@dataclasses.dataclass
+class SyntheticTokenPipeline:
+    """Stateful cursor over the deterministic stream (cursor == step)."""
+
+    cfg: ArchConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    step: int = 0
+    host_shard: int = 0
+    n_hosts: int = 1
+
+    def next(self):
+        b = make_batch(self.cfg, self.batch, self.seq, seed=self.seed,
+                       step=self.step, host_shard=self.host_shard,
+                       n_hosts=self.n_hosts)
+        self.step += 1
+        return b
+
+    def state_dict(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, s):
+        self.step = int(s["step"])
+        self.seed = int(s["seed"])

@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape)`` returns the exact pytree a real batch would
+have, as shape/dtype structs (weak-type-correct, shardable, no device
+allocation).  For decode shapes it also includes the (token, pos) decode
+inputs; the KV-cache struct comes from ``jax.eval_shape`` over
+``init_cache`` in the dry-run itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+__all__ = ["input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "decode":
+        return {"tokens": _sds((B,), jnp.int32), "pos": _sds((), jnp.int32)}
+
+    if cfg.modality == "audio":
+        d = {"features": _sds((B, S, cfg.d_model), dt),
+             "mask": _sds((B, S), jnp.bool_)}
+        if shape.kind == "train":
+            d["targets"] = _sds((B, S), jnp.int32)
+        return d
+    if cfg.modality == "vision":
+        P = cfg.n_prefix_embeds
+        d = {"tokens": _sds((B, S - P), jnp.int32),
+             "patches": _sds((B, P, cfg.d_model), dt)}
+        if shape.kind == "train":
+            d["targets"] = _sds((B, S - P), jnp.int32)
+        return d
+    d = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        d["targets"] = _sds((B, S), jnp.int32)
+    return d

@@ -1,0 +1,31 @@
+"""Naive O(N^2) DFT — the testing oracle for everything FFT in this repo.
+
+Direct implementation of the paper's definition:
+
+    M[k][l] = sum_i sum_j M[i][j] * w^{ki} * w^{lj},   w = exp(-2*pi*i/N)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["dft1d_naive", "dft2d_naive"]
+
+
+def _dft_matrix(n: int, dtype=jnp.complex64) -> jnp.ndarray:
+    k = jnp.arange(n)
+    w = jnp.exp(-2j * jnp.pi * jnp.outer(k, k) / n)
+    return w.astype(dtype)
+
+
+def dft1d_naive(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """O(N^2) DFT along ``axis``."""
+    x = jnp.asarray(x)
+    n = x.shape[axis]
+    w = _dft_matrix(n, jnp.result_type(x, jnp.complex64))
+    return jnp.moveaxis(jnp.tensordot(jnp.moveaxis(x, axis, -1), w, axes=[[-1], [1]]), -1, axis)
+
+
+def dft2d_naive(m: jnp.ndarray) -> jnp.ndarray:
+    """O(N^4-equivalent) 2-D DFT of a square (or rectangular) matrix."""
+    return dft1d_naive(dft1d_naive(m, axis=-1), axis=-2)

@@ -1,0 +1,62 @@
+"""Pure-jnp radix-2 1-D FFT (decimation-in-time, bit-reversal reorder).
+
+This is the algorithmic basis of the Pallas kernel in ``repro.kernels.fft``:
+identical stage structure, so the kernel can be validated stage-by-stage
+against this implementation, which in turn is validated against the naive
+DFT oracle and ``jnp.fft.fft``.
+
+Power-of-two lengths only; ``repro.fft.fft2d`` dispatches to ``jnp.fft`` for
+general lengths (XLA will pick Bluestein — exactly the "slow sizes" the
+paper's padding method routes around).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["fft1d_stockham", "bit_reverse_indices"]
+
+
+def bit_reverse_indices(n: int) -> np.ndarray:
+    """Bit-reversal permutation for length n (n a power of two)."""
+    if n & (n - 1) or n < 1:
+        raise ValueError(f"n must be a power of two, got {n}")
+    bits = int(np.log2(n))
+    idx = np.arange(n, dtype=np.int64)
+    rev = np.zeros_like(idx)
+    for _ in range(bits):
+        rev = (rev << 1) | (idx & 1)
+        idx >>= 1
+    return rev
+
+
+def fft1d_stockham(x: jnp.ndarray, *, inverse: bool = False) -> jnp.ndarray:
+    """Radix-2 FFT along the last axis. x: (..., n) complex, n = 2**k.
+
+    The stage loop is unrolled at trace time (log2 n stages), matching the
+    Pallas kernel's structure one-to-one.
+    """
+    x = jnp.asarray(x)
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"length {n} is not a power of two")
+    ctype = jnp.result_type(x, jnp.complex64)
+    x = x.astype(ctype)
+    if n == 1:
+        return x
+
+    x = x[..., bit_reverse_indices(n)]
+    sign = 1.0 if inverse else -1.0
+    size = 2
+    while size <= n:
+        half = size // 2
+        tw = jnp.exp(sign * 2j * jnp.pi * jnp.arange(half) / size).astype(ctype)
+        xs = x.reshape(x.shape[:-1] + (n // size, size))
+        even = xs[..., :half]
+        odd = xs[..., half:] * tw
+        x = jnp.concatenate([even + odd, even - odd], axis=-1).reshape(x.shape)
+        size *= 2
+    if inverse:
+        x = x / n
+    return x

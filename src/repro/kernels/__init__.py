@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (row FFTs and the
+blocked transpose), each with a jit'd op wrapper and a pure-jnp oracle.
+Validated with interpret=True on CPU; compiled path targets TPU."""
+
+from repro.kernels.fft.ops import fft_rows_op
+from repro.kernels.transpose.ops import transpose_op
+
+__all__ = ["fft_rows_op", "transpose_op"]

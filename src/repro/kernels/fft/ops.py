@@ -1,0 +1,61 @@
+"""jit'd public op for the Pallas row-FFT kernel.
+
+Handles: complex <-> plane conversion, row padding to the block multiple,
+VMEM-aware block-rows selection, and CPU fallback to interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fft.kernel import fft_rows_pallas
+
+__all__ = ["fft_rows_op", "pick_block_rows"]
+
+_VMEM_BUDGET = 8 * 1024 * 1024  # ~half of a v5e core's 16 MiB VMEM
+
+
+def pick_block_rows(n: int, dtype_bytes: int = 4) -> int:
+    """Largest power-of-two block_rows with ~6 plane buffers under budget."""
+    per_row = 6 * n * dtype_bytes  # in re/im + out re/im + ping-pong
+    b = _VMEM_BUDGET // max(per_row, 1)
+    b = 1 << max(int(b).bit_length() - 1, 0)
+    return int(max(1, min(b, 256)))
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_rows", "interpret"))
+def fft_rows_op(
+    x: jnp.ndarray,
+    *,
+    inverse: bool = False,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Complex row FFT via the Pallas kernel. x: (..., rows, n) complex."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"pallas fft kernel requires power-of-two length, got {n}")
+    if block_rows is None:
+        block_rows = pick_block_rows(n)
+    lead = x.shape[:-2]
+    rows = x.shape[-2]
+    x2 = x.reshape((-1, n)) if lead else x.reshape((rows, n))
+    total = x2.shape[0]
+    padded = (total + block_rows - 1) // block_rows * block_rows
+    if padded != total:
+        x2 = jnp.pad(x2, ((0, padded - total), (0, 0)))
+    re = jnp.real(x2).astype(jnp.float32)
+    im = jnp.imag(x2).astype(jnp.float32)
+    ore, oim = fft_rows_pallas(re, im, block_rows=block_rows, inverse=inverse,
+                               interpret=interpret)
+    out = (ore[:total] + 1j * oim[:total]).astype(jnp.result_type(x, jnp.complex64))
+    return out.reshape(lead + (rows, n)) if lead else out.reshape((rows, n))

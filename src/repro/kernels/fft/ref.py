@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Pallas row-FFT kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fft_rows_ref"]
+
+
+def fft_rows_ref(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False):
+    """Reference: complex FFT along the last axis, returned as planes."""
+    x = re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
+    y = jnp.fft.ifft(x, axis=-1) if inverse else jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(re.dtype), jnp.imag(y).astype(im.dtype)

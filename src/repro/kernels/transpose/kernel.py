@@ -1,0 +1,39 @@
+"""Pallas TPU kernel: blocked matrix transpose (paper Appendix A analogue).
+
+The paper's ``hcl_transpose_block`` swaps cache-sized tiles; the TPU analogue
+swaps VMEM tiles: grid (N/b, N/b), program (i, j) reads tile (i, j), writes
+its transpose to tile (j, i) of the output.  Tile 128x128 matches the
+8x128 native layout (16 sublane rounds) and keeps both tiles well under
+VMEM.  Complex matrices are transposed as two f32 planes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["transpose_pallas"]
+
+
+def _tr_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def transpose_pallas(x: jnp.ndarray, *, block: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Blocked transpose of a 2-D array; dims must divide by ``block``
+    (ops.py pads)."""
+    r, c = x.shape
+    if r % block or c % block:
+        raise ValueError(f"shape {x.shape} not divisible by block={block}")
+    grid = (r // block, c // block)
+    fn = pl.pallas_call(
+        _tr_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((c, r), x.dtype),
+        interpret=interpret,
+    )
+    return fn(x)

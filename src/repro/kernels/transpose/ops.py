@@ -1,0 +1,31 @@
+"""jit'd public op for the blocked transpose kernel (pads to the block grid,
+handles complex via planes, interprets on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.transpose.kernel import transpose_pallas
+
+__all__ = ["transpose_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def transpose_op(x: jnp.ndarray, *, block: int = 128,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    r, c = x.shape
+    pr = (r + block - 1) // block * block
+    pc = (c + block - 1) // block * block
+
+    def run(plane):
+        p = jnp.pad(plane, ((0, pr - r), (0, pc - c)))
+        return transpose_pallas(p, block=block, interpret=interpret)[:c, :r]
+
+    if jnp.iscomplexobj(x):
+        return run(jnp.real(x)) + 1j * run(jnp.imag(x))
+    return run(x)

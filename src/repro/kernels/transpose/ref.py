@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the blocked transpose kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["transpose_ref"]
+
+
+def transpose_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return x.T

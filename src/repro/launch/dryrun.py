@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: .lower().compile() for every (arch x shape x mesh).
+
+This is the scale proof without hardware: 512 placeholder host devices let
+``make_production_mesh`` build the real 16x16 (single-pod) and 2x16x16
+(multi-pod) meshes; every cell lowers its real step function (train_step
+with optimizer / prefill / serve_step against the full KV cache) with the
+production shardings, compiles it through the XLA SPMD partitioner, and
+records memory_analysis / cost_analysis / the collective schedule for the
+roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx_132b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCfg, TrainCfg
+from repro.data.specs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (active_param_count, model_flops,
+                                   param_count, roofline_terms)
+from repro.models import transformer as model
+from repro.models.registry import ARCH_IDS, get_config
+from repro.models.sharding import (batch_pspecs, cache_pspecs, embed_dshard,
+                                   param_pspecs, sanitize_pspecs)
+from repro.train.step import (TrainState, init_train_state, make_serve_step,
+                              make_train_step)
+
+__all__ = ["cell_plan", "run_cell", "main"]
+
+DEFAULT_OUT = "experiments/dryrun"
+
+
+def cell_plan() -> list[tuple[str, str]]:
+    """All runnable (arch, shape) cells with the skips from DESIGN.md §4."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if shape.kind == "decode" and not cfg.supports_decode():
+                continue  # encoder-only: no autoregressive decode
+            if sname == "long_500k" and not cfg.subquadratic():
+                continue  # 500k dense-KV decode needs sub-quadratic archs
+            cells.append((arch, sname))
+    return cells
+
+
+def _train_cfg_for(cfg: ArchConfig, shape: ShapeCfg, mesh) -> TrainCfg:
+    # Microbatch count keeps per-microbatch global batch >= the DP extent.
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    nmb = max(1, shape.global_batch // dp)
+    nmb = min(nmb, 8)
+    while shape.global_batch % nmb:
+        nmb -= 1
+    return TrainCfg(microbatches=nmb, remat=True)
+
+
+def _named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _drop_fsdp(specs):
+    """Remove the 'data' axis from every param spec (inference serving)."""
+    def fix(s):
+        out = []
+        for e in tuple(s):
+            if e == "data":
+                out.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != "data")
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                out.append(e)
+        return P(*out)
+    return jax.tree.map(fix, specs)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               analysis: bool = False, opts: dict | None = None):
+    """Build mesh + shardings and lower the cell's step function.
+
+    Returns (parts, meta): parts is a list of (name, lowered, weight) whose
+    weighted cost sum is one production step.  ``analysis=True`` unrolls
+    layer scans / q-chunk maps and lowers grad-microbatch and optimizer
+    separately (XLA cost_analysis counts while bodies once, so the scanned
+    compile-proof lowering cannot be used for roofline flops — see
+    EXPERIMENTS.md §Roofline method).
+
+    ``opts``: perf-iteration overrides (EXPERIMENTS.md §Perf):
+      shard_grad_accum: bool — pin grad-accum carry to param shardings
+      ssd_remat: bool        — rematerialize SSD intra-chunk tensors
+      ssd_chunk: int         — SSD chunk length override
+      capacity_factor: float — MoE capacity override
+      cache_data_shard: bool — shard KV-cache seq over ('data','model')
+      no_fsdp: bool          — inference-only: drop the 'data' storage dim
+                               from param specs (weights replicated over
+                               data, no per-layer FSDP all-gathers)
+      seq_shard: bool        — sequence-parallel activations (Ulysses-style)
+    """
+    import dataclasses as _dc
+    from repro.models.sharding import set_seq_shard
+    opts = opts or {}
+    set_seq_shard(bool(opts.get("seq_shard", False)))
+    cfg = get_config(arch)
+    if opts.get("capacity_factor") and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(
+            cfg.moe, capacity_factor=float(opts["capacity_factor"])))
+    if cfg.ssm is not None and (opts.get("ssd_remat") or opts.get("ssd_chunk")):
+        cfg = _dc.replace(cfg, ssm=_dc.replace(
+            cfg.ssm,
+            remat_chunk=bool(opts.get("ssd_remat", cfg.ssm.remat_chunk)),
+            chunk=int(opts.get("ssd_chunk", cfg.ssm.chunk))))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    have_pod = multi_pod
+    chips = int(mesh.devices.size)
+
+    params_shape = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    n_params = param_count(params_shape)
+    n_active = active_param_count(cfg, n_params)
+    mflops = model_flops(cfg, shape, n_params, n_active)
+
+    batch_struct = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = _train_cfg_for(cfg, shape, mesh)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+        sspec = sanitize_pspecs(param_pspecs(state_shape, have_pod),
+                                state_shape, mesh)
+        bspec = sanitize_pspecs(batch_pspecs(batch_struct, have_pod),
+                                batch_struct, mesh)
+        if not analysis:
+            grad_sh = (_named(mesh, sspec.params)
+                       if opts.get("shard_grad_accum") else None)
+            step = make_train_step(cfg, tcfg, grad_shardings=grad_sh)
+            jfn = jax.jit(step,
+                          in_shardings=(_named(mesh, sspec), _named(mesh, bspec)),
+                          out_shardings=(_named(mesh, sspec), None),
+                          donate_argnums=(0,))
+            with mesh:
+                lowered = jfn.lower(state_shape, batch_struct)
+            parts = [("train_step", lowered, 1.0)]
+        else:
+            # part 1: one unrolled grad microbatch (weight = n_microbatches)
+            nmb = tcfg.microbatches
+            mb_struct = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((s.shape[0] // nmb,) + s.shape[1:],
+                                               s.dtype), batch_struct)
+            mbspec = sanitize_pspecs(batch_pspecs(mb_struct, have_pod),
+                                     mb_struct, mesh)
+            from repro.models.transformer import loss_fn as _loss
+
+            # remat=False halves the unrolled-graph compile cost; the
+            # production program DOES remat, so run_cell applies the 4/3
+            # analytic flop correction (fwd 2ND + bwd 4ND + remat-fwd 2ND)
+            # to train cells — stated in EXPERIMENTS.md §Roofline method.
+            def grad_mb(params, mb):
+                return jax.grad(
+                    lambda p: _loss(p, mb, cfg, remat=False, q_chunk=None,
+                                    vocab_chunk=None, scan_layers=False)[0]
+                )(params)
+
+            pspec_only = sanitize_pspecs(param_pspecs(params_shape, have_pod),
+                                         params_shape, mesh)
+            jg = jax.jit(grad_mb,
+                         in_shardings=(_named(mesh, pspec_only),
+                                       _named(mesh, mbspec)),
+                         out_shardings=_named(mesh, pspec_only))
+            # part 2: optimizer update, once per step
+            from repro.optim.adamw import adamw_update
+
+            def opt_fn(grads, opt, params):
+                return adamw_update(grads, opt, params, tcfg,
+                                    jnp.float32(1e-4))
+
+            opt_shape = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg)).opt
+            ospec = sanitize_pspecs(param_pspecs(opt_shape, have_pod),
+                                    opt_shape, mesh)
+            jo = jax.jit(opt_fn,
+                         in_shardings=(_named(mesh, pspec_only),
+                                       _named(mesh, ospec),
+                                       _named(mesh, pspec_only)),
+                         out_shardings=(_named(mesh, pspec_only),
+                                        _named(mesh, ospec), None))
+            with mesh:
+                parts = [("grad_mb", jg.lower(params_shape, mb_struct), float(nmb)),
+                         ("opt", jo.lower(params_shape, opt_shape, params_shape), 1.0)]
+
+    elif shape.kind == "prefill":
+        pspec = sanitize_pspecs(param_pspecs(params_shape, have_pod),
+                                params_shape, mesh)
+        pspec = embed_dshard(pspec, params_shape)  # §Perf Q2
+        pspec = sanitize_pspecs(pspec, params_shape, mesh)
+        if opts.get("no_fsdp"):
+            pspec = _drop_fsdp(pspec)
+        bspec = sanitize_pspecs(batch_pspecs(batch_struct, have_pod),
+                                batch_struct, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspec = sanitize_pspecs(cache_pspecs(cache_shape, have_pod),
+                                cache_shape, mesh)
+
+        def prefill_fn(params, batch):
+            cache = model.init_cache(cfg, shape.global_batch, shape.seq_len)
+            return model.prefill(params, batch, cfg, cache,
+                                 q_chunk=None if analysis else 512,
+                                 scan_layers=not analysis)
+
+        jfn = jax.jit(prefill_fn,
+                      in_shardings=(_named(mesh, pspec), _named(mesh, bspec)),
+                      out_shardings=(None, _named(mesh, cspec)))
+        with mesh:
+            parts = [("prefill", jfn.lower(params_shape, batch_struct), 1.0)]
+
+    else:  # decode
+        pspec = sanitize_pspecs(param_pspecs(params_shape, have_pod),
+                                params_shape, mesh)
+        pspec = embed_dshard(pspec, params_shape)  # §Perf Q2
+        pspec = sanitize_pspecs(pspec, params_shape, mesh)
+        if opts.get("no_fsdp"):
+            pspec = _drop_fsdp(pspec)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len))
+        seq_axes = (("data", "model") if opts.get("cache_data_shard")
+                    else "model")
+        cspec = sanitize_pspecs(
+            cache_pspecs(cache_shape, have_pod, seq_axes=seq_axes),
+            cache_shape, mesh)
+        tok_struct = batch_struct["tokens"]
+        tok_spec = sanitize_pspecs(P(("pod", "data") if have_pod else "data"),
+                                   tok_struct, mesh)
+
+        def serve(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos, cfg,
+                                     scan_layers=not analysis)
+
+        jfn = jax.jit(serve,
+                      in_shardings=(_named(mesh, pspec), _named(mesh, cspec),
+                                    NamedSharding(mesh, tok_spec), None),
+                      out_shardings=(None, _named(mesh, cspec)),
+                      donate_argnums=(1,))
+        with mesh:
+            parts = [("serve_step",
+                      jfn.lower(params_shape, cache_shape, tok_struct,
+                                jax.ShapeDtypeStruct((), jnp.int32)), 1.0)]
+
+    meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "chips": chips, "n_params": n_params, "n_active": n_active,
+            "model_flops": mflops, "kind": shape.kind,
+            "remat_flop_correction": (4.0 / 3.0 if analysis and
+                                      shape.kind == "train" else 1.0)}
+    return parts, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = DEFAULT_OUT, tag: str = "baseline",
+             analysis: bool = False, opts: dict | None = None) -> dict:
+    t0 = time.time()
+    parts, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                             analysis=analysis, opts=opts)
+    meta["opts"] = opts or {}
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    cost_sum: dict[str, float] = {}
+    coll_sum: dict[str, int] = {}
+    mems = []
+    for name, lowered, weight in parts:
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        corr = meta.get("remat_flop_correction", 1.0) if name == "grad_mb" else 1.0
+        cost_sum["flops"] = cost_sum.get("flops", 0.0) + \
+            weight * corr * float(cost.get("flops", 0.0))
+        cost_sum["bytes accessed"] = cost_sum.get("bytes accessed", 0.0) + \
+            weight * float(cost.get("bytes accessed", 0.0))
+        from repro.launch.roofline import collective_bytes
+        for k, v in collective_bytes(compiled.as_text()).items():
+            coll_sum[k] = coll_sum.get(k, 0) + int(weight * v)
+        mems.append((name, compiled.memory_analysis()))
+    t_compile = time.time() - t0
+
+    terms = roofline_terms(cost_sum, "", meta["chips"], meta["model_flops"])
+    terms.coll_bytes = coll_sum
+    terms.collective_s = float(sum(coll_sum.values())) / 50e9
+
+    mem = mems[0][1]
+    rec = {
+        **meta, "tag": tag, "analysis": analysis,
+        "parts": [n for n, _, _ in parts],
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "roofline": terms.to_dict(),
+    }
+    print(f"[dryrun] {arch} x {shape_name} mesh={'2x16x16' if multi_pod else '16x16'}"
+          f" tag={tag} compile={t_compile:.1f}s dominant={terms.dominant}"
+          f" useful={terms.useful_ratio:.3f}")
+    for name, m in mems:
+        print(f"  memory_analysis[{name}]: {m}")
+    print(f"  cost_analysis(step-weighted): flops={cost_sum.get('flops', 0):.3e}"
+          f" bytes={cost_sum.get('bytes accessed', 0):.3e}")
+    print(f"  collectives: {coll_sum}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}__{tag}.json")
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unrolled lowering for roofline-accurate costs")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="perf override key=value (repeatable)")
+    args = ap.parse_args()
+
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        try:
+            opts[k] = json.loads(v)
+        except json.JSONDecodeError:
+            opts[k] = v
+
+    cells = cell_plan() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                         tag=args.tag, analysis=args.analysis, opts=opts)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((arch, shape, mp, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"FAILED {len(failures)} cells: {failures}")
+        return 1
+    print("dry-run: all requested cells compiled")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

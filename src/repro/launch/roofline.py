@@ -1,0 +1,170 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+parsed from the *post-SPMD* HLO text: we sum the output-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (per-device bytes moved, since the HLO is
+the per-device program).  MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) gives
+the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes", "roofline_terms",
+           "model_flops", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-class target constants."""
+    peak_flops: float = 197e12     # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9          # B/s per chip
+    ici_bw: float = 50e9           # B/s per link
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|[a-z0-9\[\],{}/ ]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind output bytes summed over the HLO module.
+    '-start' ops counted, '-done' skipped (same buffer)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(2).lower()
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+    return out
+
+
+def param_count(params_shape_tree) -> int:
+    import jax
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shape_tree)))
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeCfg, n_params: int,
+                n_active: int | None = None) -> float:
+    """6*N*D (training) / 2*N*D (inference fwd) with D = processed tokens.
+    MoE uses active params."""
+    n = n_active if n_active is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def active_param_count(cfg: ArchConfig, n_params: int) -> int:
+    """Approximate active params for MoE archs (experts scaled by top_k/E)."""
+    if cfg.moe is None:
+        return n_params
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    expert_params = cfg.n_layers * 3 * cfg.d_model * cfg.moe.d_expert * E
+    if cfg.mlp == "gelu":
+        expert_params = cfg.n_layers * 2 * cfg.d_model * cfg.moe.d_expert * E
+    rest = n_params - expert_params
+    return int(rest + expert_params * k / E)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: dict[str, int]
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline actually achievable: useful
+        model FLOPs over (bound time x fleet peak)."""
+        denom = self.bound_s * self.chips * HW().peak_flops
+        return self.model_flops / denom if denom else float("nan")
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed, "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops, "chips": self.chips,
+            "dominant": self.dominant, "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(cost: dict, hlo_text: str, chips: int,
+                   mflops: float, hw: HW = HW()) -> RooflineTerms:
+    """cost: compiled.cost_analysis() dict.  HLO flops/bytes there are for
+    the per-device partitioned program; multiply by chips for fleet totals
+    where needed (the terms below are per-step wall-clock seconds)."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    return RooflineTerms(
+        compute_s=flops_dev / hw.peak_flops,
+        memory_s=bytes_dev / hw.hbm_bw,
+        collective_s=coll_total / hw.ici_bw,
+        flops=flops_dev * chips,
+        bytes_accessed=bytes_dev * chips,
+        coll_bytes=coll,
+        model_flops=mflops,
+        chips=chips,
+    )

@@ -1,0 +1,10 @@
+from repro.models.transformer import (init_params, loss_fn, forward,
+                                      init_cache, prefill, decode_step)
+from repro.models.sharding import param_pspecs, batch_pspecs, cache_pspecs
+from repro.models.registry import ARCH_IDS, get_config, get_smoke_config
+
+__all__ = [
+    "init_params", "loss_fn", "forward", "init_cache", "prefill", "decode_step",
+    "param_pspecs", "batch_pspecs", "cache_pspecs",
+    "ARCH_IDS", "get_config", "get_smoke_config",
+]

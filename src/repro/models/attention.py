@@ -1,0 +1,171 @@
+"""Attention: GQA (train / prefill / decode with KV cache) and MLA
+(DeepSeek-V2 multi-head latent attention with compressed-KV cache).
+
+Memory discipline: causal attention is q-chunked (``q_chunk``) via lax.map,
+so peak score memory is (B, H, q_chunk, S) — required for the 32k-prefill
+shapes.  Softmax in f32.  Decode attention contracts against a KV cache
+whose sequence axis may be sharded over the 'model' mesh axis (sequence-
+parallel decode); the softmax/psum pattern is XLA-SPMD native.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, dense_init, apply_rope, norm_init, apply_norm
+
+__all__ = [
+    "gqa_init", "gqa_apply", "gqa_init_cache",
+    "mla_init", "mla_apply", "mla_init_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# core scaled-dot-product with GQA grouping, causal masking, q-chunking
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, q_pos, kv_len, *, causal: bool, q_chunk: int | None):
+    """q: (B,Tq,H,hd); k,v: (B,Tk,KV,hd); q_pos: (Tq,) absolute positions;
+    kv_len: scalar or None — valid prefix length of k/v (cache)."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    kpos = jnp.arange(Tk)
+
+    def block(q_blk, pos_blk):
+        # q_blk: (B, t, H, hd)
+        t = q_blk.shape[1]
+        qg = q_blk.reshape(B, t, KV, G, hd)
+        s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) * scale
+        mask = jnp.ones((t, Tk), bool)
+        if causal:
+            mask &= kpos[None, :] <= pos_blk[:, None]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgts,bskh->btkgh", p, v)
+        return o.reshape(B, t, H, v.shape[-1])  # v head dim may differ (MLA)
+
+    if q_chunk is None or Tq <= q_chunk or Tq % q_chunk:
+        return block(q, q_pos)
+    nc = Tq // q_chunk
+    qs = jnp.moveaxis(q.reshape(B, nc, q_chunk, H, hd), 1, 0)
+    ps = q_pos.reshape(nc, q_chunk)
+    outs = jax.lax.map(lambda args: block(*args), (qs, ps))  # (nc, B, qc, H, vd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Tq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, d: int, n_heads: int, n_kv: int, hd: int, *,
+             bias: bool = False, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * hd, bias=bias, dtype=dtype),
+        "wk": dense_init(ks[1], d, n_kv * hd, bias=bias, dtype=dtype),
+        "wv": dense_init(ks[2], d, n_kv * hd, bias=bias, dtype=dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d, dtype=dtype),
+    }
+
+
+def gqa_init_cache(batch: int, max_len: int, n_kv: int, hd: int, dtype=jnp.bfloat16):
+    z = jnp.zeros((batch, max_len, n_kv, hd), dtype)
+    return {"k": z, "v": z}
+
+
+def gqa_apply(p, x, *, n_heads: int, n_kv: int, hd: int, rope_mode: str,
+              rope_theta: float, causal: bool = True, q_chunk: int | None = 1024,
+              cache=None, pos0=0):
+    """x: (B, T, d).  cache=None: full self-attention over x (train / encoder).
+    cache given: prefill (T>1) writes [pos0, pos0+T), decode (T==1) appends.
+    Returns (out, new_cache)."""
+    B, T, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, T, n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, T, n_kv, hd)
+    v = dense(p["wv"], x).reshape(B, T, n_kv, hd)
+    pos = pos0 + jnp.arange(T)
+    q = apply_rope(q, pos, rope_mode, rope_theta)
+    k = apply_rope(k, pos, rope_mode, rope_theta)
+
+    if cache is None:
+        o = _sdpa(q, k, v, pos, None, causal=causal, q_chunk=q_chunk)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        o = _sdpa(q, ck, cv, pos, pos0 + T, causal=True, q_chunk=q_chunk)
+    return dense(p["wo"], o.reshape(B, T, n_heads * hd)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed latent KV + decoupled RoPE key
+# ---------------------------------------------------------------------------
+
+def mla_init(key, d: int, n_heads: int, *, kv_lora: int, nope: int, rope: int,
+             v_dim: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * (nope + rope), dtype=dtype),
+        "w_dkv": dense_init(ks[1], d, kv_lora + rope, dtype=dtype),
+        "kv_norm": norm_init(kv_lora),
+        "w_uk": dense_init(ks[2], kv_lora, n_heads * nope, dtype=dtype),
+        "w_uv": dense_init(ks[3], kv_lora, n_heads * v_dim, dtype=dtype),
+        "wo": dense_init(ks[4], n_heads * v_dim, d, dtype=dtype),
+    }
+
+
+def mla_init_cache(batch: int, max_len: int, kv_lora: int, rope: int,
+                   dtype=jnp.bfloat16):
+    # The MLA memory win: cache holds the compressed latent + shared rope key,
+    # (kv_lora + rope) per token instead of 2*H*hd.
+    return {
+        "ckv": jnp.zeros((batch, max_len, kv_lora), dtype),
+        "krope": jnp.zeros((batch, max_len, rope), dtype),
+    }
+
+
+def mla_apply(p, x, *, n_heads: int, kv_lora: int, nope: int, rope: int,
+              v_dim: int, rope_theta: float, q_chunk: int | None = 1024,
+              cache=None, pos0=0):
+    B, T, _ = x.shape
+    H = n_heads
+    q = dense(p["wq"], x).reshape(B, T, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pos = pos0 + jnp.arange(T)
+    q_rope = apply_rope(q_rope, pos, "full", rope_theta)
+
+    dkv = dense(p["w_dkv"], x)
+    ckv = apply_norm(p["kv_norm"], dkv[..., :kv_lora])
+    krope = apply_rope(dkv[..., kv_lora:][:, :, None, :], pos, "full",
+                       rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos0, 0))
+        krope_all = jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, pos0, 0))
+        new_cache = {"ckv": ckv_all, "krope": krope_all}
+        kv_len = pos0 + T
+    else:
+        ckv_all, krope_all, new_cache, kv_len = ckv, krope, None, None
+
+    # Expanded (prefill/train) form: decompress k/v per head.
+    k_nope = dense(p["w_uk"], ckv_all).reshape(B, -1, H, nope)
+    v = dense(p["w_uv"], ckv_all).reshape(B, -1, H, v_dim)
+    k_rope_h = jnp.broadcast_to(krope_all[:, :, None, :],
+                                (B, krope_all.shape[1], H, rope))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = _sdpa(qfull, k, v, pos, kv_len, causal=True, q_chunk=q_chunk)
+    return dense(p["wo"], o.reshape(B, T, H * v_dim)), new_cache

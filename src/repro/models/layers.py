@@ -1,0 +1,110 @@
+"""Shared model layers: norms, RoPE variants, MLPs, embeddings.
+
+Parameters are plain nested dicts of jnp arrays; every layer is a pair of
+``init_*`` / ``apply_*`` pure functions.  Compute dtype is bf16 with f32
+accumulation for norms/softmax (standard large-model practice).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "dense", "norm_init", "apply_norm", "rope_freqs",
+    "apply_rope", "mlp_init", "apply_mlp", "embed_init",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.bfloat16):
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rope_freqs(hd: int, mode: str, theta: float = 10000.0) -> tuple[int, np.ndarray]:
+    """Return (n_rot, inv_freq) — how many leading dims of the head get
+    rotated and their inverse frequencies.
+
+    mode: 'full' (all dims), 'half' (chatglm-style 2d rope: first half),
+    'partial25' (stablelm-style: first quarter), 'none'.
+    """
+    frac = {"full": 1.0, "half": 0.5, "partial25": 0.25, "none": 0.0}[mode]
+    n_rot = int(hd * frac) // 2 * 2
+    if n_rot == 0:
+        return 0, np.zeros((0,), np.float32)
+    inv = 1.0 / (theta ** (np.arange(0, n_rot, 2, dtype=np.float32) / n_rot))
+    return n_rot, inv
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, mode: str,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    n_rot, inv = rope_freqs(hd, mode, theta)
+    if n_rot == 0:
+        return x
+    inv = jnp.asarray(inv)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., T, n_rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr = x[..., :n_rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, x[..., n_rot:]], axis=-1)
+
+
+def mlp_init(key, d: int, d_ff: int, kind: str = "swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wg": dense_init(ks[0], d, d_ff, dtype=dtype),
+            "wu": dense_init(ks[1], d, d_ff, dtype=dtype),
+            "wd": dense_init(ks[2], d_ff, d, dtype=dtype),
+        }
+    return {
+        "wu": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "wd": dense_init(ks[1], d_ff, d, dtype=dtype),
+    }
+
+
+def apply_mlp(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return dense(p["wd"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wu"], x))
+    return dense(p["wd"], jax.nn.gelu(dense(p["wu"], x)))
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}

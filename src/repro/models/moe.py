@@ -1,0 +1,98 @@
+"""Mixture-of-Experts block: top-k token-choice routing with *grouped*
+capacity dispatch (Mesh-TF / T5X-style, pjit-native einsums) + optional
+shared experts (DeepSeek style).
+
+Tokens are routed within groups (the batch rows), so the dispatch tensor is
+(G, T, E, C) with per-group capacity C = T*k/E*cf — sharding G over 'data'
+and E over 'model' makes the XLA SPMD partitioner emit the expert-parallel
+all-to-alls for the dispatch/combine einsums, and the one-hot never exceeds
+~T*k*cf entries per group.  Capacity is a *padding* choice in the paper's
+sense (tokens per expert padded to a model-chosen size); ``capacity_factor``
+is FPM-tunable (see repro.train.fpm_schedule).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoECfg
+from repro.models.layers import dense_init, mlp_init, apply_mlp
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_init(key, d: int, cfg: MoECfg, *, mlp_kind: str = "swiglu",
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    E, f = cfg.n_experts, cfg.d_expert
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, scale=scale, dtype=jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / np.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(jax.random.fold_in(key, 7), d,
+                               cfg.n_shared * f, kind=mlp_kind, dtype=dtype)
+    return p
+
+
+def moe_capacity(tokens_per_group: int, cfg: MoECfg) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.top_k / cfg.n_experts
+                    * cfg.capacity_factor))
+    return max(8, (c + 7) // 8 * 8)  # sublane-multiple padding
+
+
+def moe_apply(p, x, cfg: MoECfg, *, mlp_kind: str = "swiglu"):
+    """x: (G, T, d) -> (G, T, d) plus aux load-balancing loss (scalar).
+    G (batch rows) are the routing groups."""
+    G, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(T, cfg)
+    f32 = jnp.float32
+
+    logits = x.astype(f32) @ p["router"]["w"]                       # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                   # (G, T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert's capacity buffer,
+    # counted in (choice-major, token) order within the group.
+    oh = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)               # (G,T,k,E)
+    ohf = jnp.moveaxis(oh, 2, 1).reshape(G, k * T, E)               # choice-major
+    pos_f = jnp.cumsum(ohf, axis=1) - ohf                           # (G,kT,E)
+    pos = jnp.moveaxis(pos_f.reshape(G, k, T, E), 1, 2)             # (G,T,k,E)
+    pos = (pos * oh).sum(-1)                                        # (G,T,k)
+    keep = pos < C
+
+    # dispatch: (G, T, E, C) one-hot accumulated over choices; gates as a
+    # separate (G, T, E) factor folded into the combine einsum.
+    dispatch = jnp.zeros((G, T, E, C), x.dtype)
+    gates_te = jnp.zeros((G, T, E), x.dtype)
+    for j in range(k):
+        oe = jax.nn.one_hot(gate_idx[..., j], E, dtype=x.dtype)     # (G,T,E)
+        oc = jax.nn.one_hot(jnp.where(keep[..., j], pos[..., j], C), C + 1,
+                            dtype=x.dtype)[..., :C]                 # (G,T,C)
+        dispatch = dispatch + oe[..., :, None] * oc[..., None, :]
+        gates_te = gates_te + oe * gate_vals[..., j, None].astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, x)                  # (G,E,C,d)
+    if mlp_kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"]))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["wu"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])                   # (G,E,C,d)
+    y = jnp.einsum("gtec,gte,gecd->gtd", dispatch, gates_te, ye)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, kind=mlp_kind)
+
+    # Aux load-balance loss (Switch-style): E * mean_e f_e * P_e.
+    frac_tokens = jax.nn.one_hot(gate_idx[..., 0], E, dtype=f32).mean((0, 1))
+    frac_probs = probs.mean((0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

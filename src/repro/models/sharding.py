@@ -1,0 +1,238 @@
+"""Parameter / batch / cache PartitionSpec rules for the production mesh.
+
+Mesh axes: ('pod', 'data', 'model') multi-pod, ('data', 'model') single-pod.
+
+Policy (standard megatron-style TP + ZeRO-ish FSDP over 'data', pure DP over
+'pod' so no parameter collectives cross the pod boundary):
+
+  * up-projections  (wq/wk/wv/wu/wg, mamba in_proj, xlstm gates):
+      last dim -> 'model' (TP), second-to-last -> 'data' (FSDP storage)
+  * down-projections (wo/wd, out_proj):
+      last dim -> 'data',  second-to-last -> 'model'
+  * MoE expert banks (E, d, f): E -> 'model' (EP), f/d -> 'data' (FSDP)
+  * embeddings (V, d): V -> 'model'
+  * norms / biases / gates / small vectors: replicated
+
+KV caches: sequence axis -> 'model' (sequence-parallel decode attention),
+batch axis -> ('pod', 'data');  SSM states: batch -> ('pod','data'), heads
+-> 'model'.  Activations/batches: batch -> ('pod', 'data').
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "sanitize_pspecs",
+           "constrain_batch", "embed_dshard", "DATA_AXES"]
+
+DATA_AXES = ("pod", "data")
+
+_UP_NAMES = ("wq", "wk", "wv", "wu", "wg", "wi", "wf", "in_proj", "w_dkv",
+             "w_uk", "w_uv", "lm_head", "w")
+_DOWN_NAMES = ("wo", "wd", "out_proj")
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _spec_for(names: list[str], shape: tuple[int, ...], have_pod: bool) -> P:
+    data = "data"
+    nd = len(shape)
+    joined = set(names)
+
+    def pad(spec_tail: tuple) -> P:
+        # stacked-layer / group leading dims replicate
+        return P(*((None,) * (nd - len(spec_tail)) + spec_tail))
+
+    if "table" in joined or "embed" in joined:
+        # Vocab over 'model' (training default — safe through the grad
+        # path).  Inference lowerings flip this to d-sharded (§Perf Q2,
+        # `embed_dshard`): the lookup then needs no table gather, but the
+        # XLA partitioner mishandles that layout inside the train scan.
+        return pad(("model", None)) if nd >= 2 else P()
+    if nd >= 2 and ("moe" in joined) and names[-1] in ("wg", "wu"):
+        return pad(("model", None, data))       # (E, d, f): EP + FSDP-f
+    if nd >= 2 and ("moe" in joined) and names[-1] == "wd":
+        return pad(("model", data, None))       # (E, f, d)
+    if "router" in joined:
+        return P(*([None] * nd))
+    if names[-1] == "r":                        # xlstm recurrent (H, hd, 4hd)
+        return pad(("model", None, None)) if nd >= 3 else P(*([None] * nd))
+    if nd >= 2:
+        # dict-style dense params: the array is named "w"/"b" under a module
+        mod = names[-2] if names[-1] in ("w", "b") else names[-1]
+        if names[-1] == "b":
+            return P(*([None] * nd))
+        if any(mod == u or mod.startswith(u) for u in _DOWN_NAMES):
+            return pad(("model", data))
+        if any(mod == u or mod.startswith(u) for u in _UP_NAMES):
+            return pad((data, "model"))
+        if mod == "conv_w":
+            return pad((None, "model"))
+    return P(*([None] * nd))
+
+
+def param_pspecs(params: Any, have_pod: bool = False):
+    """Pytree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_names(path), leaf.shape, have_pod),
+        params)
+
+
+def batch_pspecs(batch: Any, have_pod: bool = False):
+    dax = (DATA_AXES if have_pod else "data")
+    def spec(path, leaf):
+        return P(*((dax,) + (None,) * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def _cache_spec(names: list[str], shape, have_pod: bool,
+                seq_axes="model") -> P:
+    dax = (DATA_AXES if have_pod else "data")
+    nd = len(shape)
+    name = names[-1]
+    if name in ("k", "v"):        # (L?, B, S, KV, hd): seq -> seq_axes
+        tail = (dax, seq_axes, None, None)
+        return P(*((None,) * (nd - 4) + tail))
+    if name in ("ckv", "krope"):  # (L?, B, S, r): seq -> seq_axes
+        tail = (dax, seq_axes, None)
+        return P(*((None,) * (nd - 3) + tail))
+    if name == "ssm":             # (..., B, H, P, N): heads -> model
+        tail = (dax, "model", None, None)
+        return P(*((None,) * (nd - 4) + tail))
+    if name == "conv":            # (..., B, w, ch)
+        tail = (dax, None, "model")
+        return P(*((None,) * (nd - 3) + tail))
+    if name in ("C", "n", "h", "c", "m"):
+        # xLSTM states: head counts are small (4) — batch-shard only.
+        return P(*((dax,) + (None,) * (nd - 1)))
+    return P(*((dax,) + (None,) * (nd - 1)))
+
+
+def cache_pspecs(cache: Any, have_pod: bool = False, seq_axes="model"):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_spec(_path_names(path), leaf.shape, have_pod,
+                                       seq_axes),
+        cache)
+
+
+def embed_dshard(specs: Any, params_shape: Any) -> Any:
+    """Flip embedding tables to d-sharded P(None, 'model') — inference
+    lowerings only (§Perf Q2: removes the full-table gather; 4.6x fewer
+    collective bytes on qwen prefill)."""
+    def fix(path, spec, leaf):
+        names = _path_names(path)
+        if ("table" in names or "embed" in names) and len(leaf.shape) >= 2:
+            return P(*((None,) * (len(leaf.shape) - 1) + ("model",)))
+        return spec
+    return jax.tree_util.tree_map_with_path(fix, specs, params_shape)
+
+
+def _context_mesh():
+    """The mesh installed by ``with mesh:`` at trace time (or None)."""
+    try:
+        from jax._src import mesh as _m
+        env_mesh = _m.thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except Exception:
+        pass
+    return None
+
+
+SEQ_SHARD = False  # sequence-parallel activations (set via set_seq_shard)
+
+
+def set_seq_shard(enabled: bool) -> None:
+    """Ulysses-style sequence parallelism for full-sequence activations:
+    constrain (B, T, d) tensors to (data-axes, 'model', None) between
+    blocks.  Attention/k-v gathers stay small under GQA; the per-layer
+    activation regathers disappear.  §Perf iter Q3."""
+    global SEQ_SHARD
+    SEQ_SHARD = bool(enabled)
+
+
+def constrain_batch(x):
+    """Pin an activation's leading (batch) dim to the data axes (and, when
+    sequence parallelism is on, the seq dim to 'model').
+
+    Without this, the SPMD partitioner may drop data-parallel sharding of
+    activations inside scan bodies and fall back to fully-replicated batch
+    with TP-only layouts (observed on zamba2_7b train: 16x activation
+    blow-up + 24 GB/step of collective-permute churn — EXPERIMENTS.md §Perf
+    iter Z3).  No-op outside a mesh context or when the batch dim does not
+    divide the data axes.
+    """
+    mesh = _context_mesh()
+    if mesh is None or not hasattr(x, "ndim") or x.ndim < 2:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dax = tuple(a for a in DATA_AXES if a in sizes and sizes[a] > 1)
+    if not dax:
+        return x
+    ext = 1
+    for a in dax:
+        ext *= sizes[a]
+    if x.shape[0] % ext:
+        return x
+    rest = [None] * (x.ndim - 1)
+    if (SEQ_SHARD and x.ndim == 3 and sizes.get("model", 1) > 1
+            and x.shape[1] % sizes["model"] == 0):
+        rest[0] = "model"
+    spec = P(dax if len(dax) > 1 else dax[0], *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def sanitize_pspecs(specs: Any, shapes: Any, mesh) -> Any:
+    """Drop mesh axes from any dim they don't divide evenly (e.g. a 504-way
+    vocab over a 16-way model axis, or batch=1 over the data axes) — the
+    leaf falls back to replication on that dim.  Keeps every lowering legal
+    without per-arch special cases."""
+    from jax.sharding import PartitionSpec as PS
+
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        dims = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        out = []
+        for dim_size, entry in zip(leaf.shape, dims):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            axes = tuple(a for a in axes if a in axis_size)
+            ext = 1
+            for a in axes:
+                ext *= axis_size[a]
+            if ext <= 1 or dim_size % ext:
+                # try a prefix of the axes that still divides
+                kept = []
+                ext = 1
+                for a in axes:
+                    if dim_size % (ext * axis_size[a]) == 0:
+                        kept.append(a)
+                        ext *= axis_size[a]
+                axes = tuple(kept)
+            if not axes:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(axes)
+        return PS(*out)
+
+    return jax.tree.map(fix, specs, shapes)

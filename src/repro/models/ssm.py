@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) blocks — chunked scan for train/prefill, O(1)-state decode.
+
+State-space recurrence with scalar-per-head decay (Mamba2's SSD form):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)      h: (H, P, N)
+    y_t = C_t · h_t + D * x_t
+
+Train/prefill uses the chunkwise algorithm (intra-chunk quadratic in log-
+decay space + inter-chunk recurrence over chunk states), so sequence memory
+is O(T * chunk) and the 500k-decode shape needs only the (H, P, N) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMCfg
+from repro.models.layers import dense_init, dense, norm_init, apply_norm
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_init_cache"]
+
+
+def _dims(d_model: int, cfg: SSMCfg):
+    d_inner = cfg.expand * d_model
+    H = d_inner // cfg.head_dim
+    return d_inner, H
+
+
+def mamba2_init(key, d_model: int, cfg: SSMCfg, dtype=jnp.bfloat16):
+    d_inner, H = _dims(d_model, cfg)
+    N = cfg.d_state
+    conv_ch = d_inner + 2 * N  # x-part + B + C go through the short conv
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner + 2 * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_ch), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": norm_init(d_inner),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype=dtype),
+    }
+
+
+def mamba2_init_cache(batch: int, d_model: int, cfg: SSMCfg, dtype=jnp.float32):
+    d_inner, H = _dims(d_model, cfg)
+    N = cfg.d_state
+    conv_ch = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.head_dim, N), dtype),
+    }
+
+
+def _split(p, x, d_inner: int, N: int, H: int):
+    zxbcdt = dense(p["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:2 * d_inner + 2 * N]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, cfg: SSMCfg, conv_state=None):
+    """Depthwise causal conv width d_conv; returns (out, new_state)."""
+    B = xbc.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, cfg.d_conv - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    w = p["conv_w"]
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(cfg.d_conv))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_state = full[:, -(cfg.d_conv - 1):] if cfg.d_conv > 1 else pad
+    return out, new_state
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk: int, h0, remat: bool = False):
+    """Chunked SSD scan.
+    xh: (B,T,H,P); Bm/Cm: (B,T,N); dt: (B,T,H); A: (H,) (positive decay rate);
+    h0: (B,H,P,N) initial state.  Returns (y, h_final)."""
+    Bsz, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    assert nc * chunk == T, "sequence must divide by ssm chunk"
+    f32 = jnp.float32
+
+    def per_chunk(h, inputs):
+        xc, bc, cc, dtc = inputs          # (B,L,H,P), (B,L,N), (B,L,N), (B,L,H)
+        L = xc.shape[1]
+        dA = dtc * (-A)                   # (B,L,H) log-decay per step (negative)
+        cum = jnp.cumsum(dA, axis=1)      # (B,L,H) inclusive
+        # Intra-chunk: y_t += sum_{s<=t} C_t·B_s exp(cum_t - cum_s) dt_s x_s
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,L_t,L_s,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        # mask in log space BEFORE exp: exp of the (positive) upper-triangle
+        # entries overflows and poisons the backward pass via inf * 0.
+        seg = jnp.where(mask[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("btn,bsn->bts", cc.astype(f32), bc.astype(f32))
+        w = cb[..., None] * decay * dtc[:, None, :, :]         # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xc.astype(f32))
+        # Inter-chunk: y_t += C_t · (exp(cum_t) * h_in)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", cc.astype(f32), h,
+                             jnp.exp(cum))
+        # State update: h_out = exp(cum_L) h_in + sum_s exp(cum_L - cum_s) dt_s B_s x_s
+        tot = cum[:, -1]                                       # (B,H)
+        rdec = jnp.exp(tot[:, None, :] - cum) * dtc            # (B,L,H)
+        h_new = (jnp.exp(tot)[:, :, None, None] * h
+                 + jnp.einsum("blh,bln,blhp->bhpn", rdec, bc.astype(f32),
+                              xc.astype(f32)))
+        return h_new, y_intra + y_inter
+
+    def rs(a):  # (B, T, ...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(a.reshape((Bsz, nc, chunk) + a.shape[2:]), 1, 0)
+
+    body = jax.checkpoint(per_chunk) if remat else per_chunk
+    h_fin, ys = jax.lax.scan(body, h0.astype(f32),
+                             (rs(xh), rs(Bm), rs(Cm), rs(dt)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, H, P)
+    return y, h_fin
+
+
+def mamba2_apply(p, x, cfg: SSMCfg, *, cache=None):
+    """x: (B, T, d_model) -> (B, T, d_model).  cache: {'conv','ssm'} for
+    decode/prefill; T==1 decode takes the fast recurrent path."""
+    Bsz, T, d_model = x.shape
+    d_inner, H = _dims(d_model, cfg)
+    N, P = cfg.d_state, cfg.head_dim
+    z, xbc, dt = _split(p, x, d_inner, N, H)
+    A = jnp.exp(p["A_log"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(p, xbc, cfg, conv_state)
+    xpart = xbc[..., :d_inner].reshape(Bsz, T, H, P)
+    Bm = xbc[..., d_inner:d_inner + N]
+    Cm = xbc[..., d_inner + N:]
+
+    if cache is not None and T == 1:
+        h = cache["ssm"]
+        dA = jnp.exp(-dt[:, 0] * A)                              # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0].astype(jnp.float32),
+                         xpart[:, 0].astype(jnp.float32))
+        h_new = dA[:, :, None, None] * h + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None] + p["D"][None, None, :, None] * xpart.astype(jnp.float32)
+    else:
+        h0 = (cache["ssm"] if cache is not None
+              else jnp.zeros((Bsz, H, P, N), jnp.float32))
+        y, h_new = _ssd_chunked(xpart, Bm, Cm, dt, A, min(cfg.chunk, T), h0,
+                                remat=cfg.remat_chunk)
+        y = y + p["D"][None, None, :, None] * xpart.astype(jnp.float32)
+
+    y = y.reshape(Bsz, T, d_inner).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y)
+    new_cache = ({"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_new}
+                 if cache is not None else None)
+    return out, new_cache

@@ -1,0 +1,454 @@
+"""Generic LM assembly for every assigned architecture family.
+
+* dense / moe / vlm / audio: homogeneous transformer layers, scanned
+  (scan-over-layers keeps the HLO size O(1) in depth) with optional remat.
+* ssm (xLSTM): alternating mLSTM/sLSTM blocks (python loop — 12 layers).
+* hybrid (Zamba2): Mamba2 backbone scanned in groups, with a *shared*
+  attention block (one parameter set, distinct KV cache per application)
+  applied every ``shared_attn_every`` blocks.
+
+All entry points are pure functions over plain-dict param pytrees:
+
+    init_params(key, cfg)
+    forward(params, batch, cfg)                  -> (hidden, aux)
+    loss_fn(params, batch, cfg)                  -> (loss, metrics)
+    init_cache(cfg, batch, max_len)
+    prefill(params, batch, cfg, cache)           -> (last_logits, cache)
+    decode_step(params, cache, tokens, pos, cfg) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (apply_mlp, apply_norm, dense, dense_init,
+                                 embed_init, mlp_init, norm_init)
+from repro.models.sharding import constrain_batch
+
+__all__ = ["init_params", "loss_fn", "init_cache", "prefill", "decode_step",
+           "forward", "Q_CHUNK"]
+
+Q_CHUNK = 512  # query-chunk for causal attention (memory bound at 32k)
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# transformer layer (dense / moe / mla)
+# ---------------------------------------------------------------------------
+
+def _init_tf_layer(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": norm_init(d, cfg.norm), "ln2": norm_init(d, cfg.norm)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        p["attn"] = attn.mla_init(ks[0], d, cfg.n_heads, kv_lora=m.kv_lora_rank,
+                                  nope=m.qk_nope_dim, rope=m.qk_rope_dim,
+                                  v_dim=m.v_head_dim, dtype=_dt(cfg))
+    else:
+        p["attn"] = attn.gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                  bias=cfg.qkv_bias, dtype=_dt(cfg))
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_init(ks[1], d, cfg.moe, mlp_kind=cfg.mlp, dtype=_dt(cfg))
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, kind=cfg.mlp, dtype=_dt(cfg))
+    return p
+
+
+def _apply_tf_layer(p, x, cfg: ArchConfig, *, cache=None, pos0=0,
+                    causal=True, q_chunk=Q_CHUNK):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if cfg.mla is not None:
+        m = cfg.mla
+        a, new_cache = attn.mla_apply(p["attn"], h, n_heads=cfg.n_heads,
+                                      kv_lora=m.kv_lora_rank, nope=m.qk_nope_dim,
+                                      rope=m.qk_rope_dim, v_dim=m.v_head_dim,
+                                      rope_theta=cfg.rope_theta, q_chunk=q_chunk,
+                                      cache=cache, pos0=pos0)
+    else:
+        a, new_cache = attn.gqa_apply(p["attn"], h, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                                      rope_mode=cfg.rope_mode,
+                                      rope_theta=cfg.rope_theta, causal=causal,
+                                      q_chunk=q_chunk, cache=cache, pos0=pos0)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_apply(p["moe"], h, cfg.moe, mlp_kind=cfg.mlp)
+    else:
+        f, aux = apply_mlp(p["mlp"], h, kind=cfg.mlp), jnp.zeros((), jnp.float32)
+    return constrain_batch(x + f), new_cache, aux
+
+
+def _layer_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.mla is not None:
+        return attn.mla_init_cache(batch, max_len, cfg.mla.kv_lora_rank,
+                                   cfg.mla.qk_rope_dim, _dt(cfg))
+    return attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, _dt(cfg))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM stack
+# ---------------------------------------------------------------------------
+
+def _xlstm_block_kinds(cfg: ArchConfig) -> list[str]:
+    k = cfg.xlstm.slstm_every
+    return ["slstm" if (i % k == k - 1) else "mlstm" for i in range(cfg.n_layers)]
+
+
+def _init_xlstm(key, cfg: ArchConfig):
+    hd = cfg.hd
+    blocks = []
+    for i, kind in enumerate(_xlstm_block_kinds(cfg)):
+        kk = jax.random.fold_in(key, i)
+        ln = norm_init(cfg.d_model, cfg.norm)
+        if kind == "mlstm":
+            blocks.append({"ln": ln,
+                           "core": xlstm_mod.mlstm_init(kk, cfg.d_model,
+                                                        cfg.n_heads, hd, _dt(cfg))})
+        else:
+            blocks.append({"ln": ln,
+                           "core": xlstm_mod.slstm_init(kk, cfg.d_model,
+                                                        cfg.n_heads, hd, _dt(cfg))})
+    return blocks
+
+
+def _apply_xlstm(params, x, cfg: ArchConfig, caches=None):
+    new_caches = [] if caches is not None else None
+    kinds = _xlstm_block_kinds(cfg)
+    for i, blk in enumerate(params["blocks"]):
+        h = apply_norm(blk["ln"], x, cfg.norm)
+        c = caches[i] if caches is not None else None
+        if kinds[i] == "mlstm":
+            o, nc = xlstm_mod.mlstm_apply(blk["core"], h, n_heads=cfg.n_heads,
+                                          hd=cfg.hd, chunk=cfg.xlstm.chunk, cache=c)
+        else:
+            o, nc = xlstm_mod.slstm_apply(blk["core"], h, n_heads=cfg.n_heads,
+                                          hd=cfg.hd, cache=c)
+        x = constrain_batch(x + o)
+        if new_caches is not None:
+            new_caches.append(nc)
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (Zamba2): scanned Mamba2 groups + shared attention block
+# ---------------------------------------------------------------------------
+
+def _hybrid_layout(cfg: ArchConfig):
+    g = cfg.hybrid.shared_attn_every
+    n_groups = int(np.ceil(cfg.n_layers / g))
+    padded = n_groups * g
+    return g, n_groups, padded
+
+
+def _init_hybrid(key, cfg: ArchConfig):
+    g, n_groups, padded = _hybrid_layout(cfg)
+    ks = jax.random.split(key, 3)
+    mamba_keys = jax.random.split(ks[0], padded)
+    mamba = jax.vmap(lambda k: ssm_mod.mamba2_init(k, cfg.d_model, cfg.ssm,
+                                                   _dt(cfg)))(mamba_keys)
+    # reshape stacked leaves to (n_groups, g, ...)
+    mamba = jax.tree.map(lambda a: a.reshape((n_groups, g) + a.shape[1:]), mamba)
+    shared = {
+        "ln": norm_init(cfg.d_model, cfg.norm),
+        "attn": attn.gqa_init(ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, dtype=_dt(cfg)),
+        "ln2": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, kind=cfg.mlp, dtype=_dt(cfg)),
+    }
+    return {"mamba": mamba, "shared": shared}
+
+
+def _hybrid_valid(cfg: ArchConfig) -> jnp.ndarray:
+    g, n_groups, padded = _hybrid_layout(cfg)
+    return jnp.asarray(np.arange(padded).reshape(n_groups, g) < cfg.n_layers)
+
+
+def _apply_hybrid(params, x, cfg: ArchConfig, caches=None, pos0=0,
+                  q_chunk=Q_CHUNK, remat=False, scan_groups=True):
+    """caches: {'attn': stacked (n_groups, ...), 'mamba': stacked (n_groups, g, ...)}"""
+    g, n_groups, _ = _hybrid_layout(cfg)
+    shared = params["shared"]
+
+    def group_body(x, xs):
+        mparams, valid, cache_g = xs
+        # shared attention block (pre-norm attn + mlp), params closed over
+        h = apply_norm(shared["ln"], x, cfg.norm)
+        a, new_attn_cache = attn.gqa_apply(
+            shared["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            hd=cfg.hd, rope_mode=cfg.rope_mode, rope_theta=cfg.rope_theta,
+            causal=True, q_chunk=q_chunk,
+            cache=cache_g["attn"] if cache_g is not None else None, pos0=pos0)
+        x = x + a
+        x = constrain_batch(
+            x + apply_mlp(shared["mlp"], apply_norm(shared["ln2"], x, cfg.norm),
+                          kind=cfg.mlp))
+
+        new_mamba = [] if cache_g is not None else None
+        for j in range(g):
+            pj = jax.tree.map(lambda a: a[j], mparams)
+            cj = (jax.tree.map(lambda a: a[j], cache_g["mamba"])
+                  if cache_g is not None else None)
+            o, nc = ssm_mod.mamba2_apply(pj, x, cfg.ssm, cache=cj)
+            x = constrain_batch(jnp.where(valid[j], x + o, x))
+            if new_mamba is not None:
+                new_mamba.append(jax.tree.map(
+                    lambda new, old: jnp.where(valid[j], new, old), nc, cj))
+        new_cache = None
+        if cache_g is not None:
+            new_cache = {"attn": new_attn_cache,
+                         "mamba": jax.tree.map(lambda *a: jnp.stack(a), *new_mamba)}
+        return x, new_cache
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    if caches is None:
+        if not scan_groups:
+            _, n_groups, _ = _hybrid_layout(cfg)
+            for gi in range(n_groups):
+                mp = jax.tree.map(lambda a: a[gi], params["mamba"])
+                x, _ = body(x, (mp, _hybrid_valid(cfg)[gi], None))
+            return x, None, jnp.zeros((), jnp.float32)
+        def scan_fn(x, xs):
+            mp, v = xs
+            x, _ = body(x, (mp, v, None))
+            return x, None
+        x, _ = jax.lax.scan(scan_fn, x, (params["mamba"], _hybrid_valid(cfg)))
+        return x, None, jnp.zeros((), jnp.float32)
+
+    if not scan_groups:
+        _, n_groups, _ = _hybrid_layout(cfg)
+        ncs = []
+        for gi in range(n_groups):
+            mp = jax.tree.map(lambda a: a[gi], params["mamba"])
+            cg = jax.tree.map(lambda a: a[gi], caches)
+            x, nc = body(x, (mp, _hybrid_valid(cfg)[gi], cg))
+            ncs.append(nc)
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    def scan_fn(x, xs):
+        mp, v, cg = xs
+        x, nc = body(x, (mp, v, cg))
+        return x, nc
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["mamba"], _hybrid_valid(cfg), caches))
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 5)
+    p: dict[str, Any] = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model, _dt(cfg)),
+                         "final_norm": norm_init(cfg.d_model, cfg.norm)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, dtype=_dt(cfg))
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        lk = jax.random.split(ks[2], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _init_tf_layer(k, cfg))(lk)
+    elif cfg.family == "ssm":
+        p["blocks"] = _init_xlstm(ks[2], cfg)
+    elif cfg.family == "hybrid":
+        p.update(_init_hybrid(ks[2], cfg))
+    else:
+        raise ValueError(cfg.family)
+    if cfg.modality == "audio":
+        p["mask_embed"] = (jax.random.normal(ks[3], (cfg.d_model,), jnp.float32)
+                           * 0.02).astype(_dt(cfg))
+    return p
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Returns (x, loss_mask): token/frame/patch embeddings."""
+    if cfg.modality == "audio":
+        x = batch["features"].astype(_dt(cfg))
+        if "mask" in batch:
+            m = batch["mask"][..., None]
+            x = jnp.where(m, params["mask_embed"][None, None, :], x)
+        return x
+    tok = params["embed"]["table"][batch["tokens"]]
+    if cfg.modality == "vision" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(_dt(cfg)), tok], axis=1)
+        return x
+    return tok
+
+
+def forward(params, batch, cfg: ArchConfig, *, remat: bool = False,
+            q_chunk: int | None = Q_CHUNK, scan_layers: bool = True):
+    """Full-sequence forward (train / encoder / prefill-style). Returns
+    (hidden (B,T,d), aux_loss).  ``scan_layers=False`` unrolls the layer
+    loop — used by the dry-run's analysis lowering, where XLA's
+    cost_analysis must see every layer (while-loop bodies are counted once).
+    """
+    x = constrain_batch(_embed_inputs(params, batch, cfg))
+    causal = not cfg.encoder_only
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, lp):
+            x, _, aux = _apply_tf_layer(lp, x, cfg, causal=causal, q_chunk=q_chunk)
+            return x, aux
+        body_fn = jax.checkpoint(body) if remat else body
+        if scan_layers:
+            x, auxs = jax.lax.scan(lambda c, lp: body_fn(c, lp), x, params["layers"])
+            aux = auxs.sum()
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, a = body_fn(x, lp)
+                aux = aux + a
+    elif cfg.family == "ssm":
+        x, _, aux = _apply_xlstm(params, x, cfg)
+    else:
+        x, _, aux = _apply_hybrid(params, x, cfg, q_chunk=q_chunk, remat=remat,
+                                  scan_groups=scan_layers)
+    return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+
+def logits_fn(params, hidden, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"]["table"].T
+    return dense(params["lm_head"], hidden)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = True,
+            vocab_chunk: int = 512, q_chunk: int | None = Q_CHUNK,
+            scan_layers: bool = True):
+    """Causal-LM CE (decoder) or masked-prediction CE (encoder).  The vocab
+    projection + CE run seq-chunked so (T, V) f32 logits never materialise."""
+    hidden, aux = forward(params, batch, cfg, remat=remat, q_chunk=q_chunk,
+                          scan_layers=scan_layers)
+    targets = batch["targets"]
+    if cfg.modality == "vision":
+        pad = jnp.full(batch["patches"].shape[:2], -1, targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    B, T, d = hidden.shape
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"]["w"])
+
+    hidden2 = hidden.reshape(B * T, d)
+    tflat = targets.reshape(B * T)
+    if vocab_chunk is None:  # analysis mode: single full-logits CE
+        vocab_chunk = B * T
+    n_chunks = (B * T + vocab_chunk - 1) // vocab_chunk
+    pad_n = n_chunks * vocab_chunk - B * T
+    if pad_n:
+        hidden2 = jnp.pad(hidden2, ((0, pad_n), (0, 0)))
+        tflat = jnp.pad(tflat, (0, pad_n), constant_values=-1)
+
+    # remat the per-chunk CE: the (chunk, V) f32 logits are recomputed in
+    # backward instead of being saved per map step (~10 GB/device on dbrx
+    # train_4k — §Perf iter D2), and the chunk axis (batch-major) is pinned
+    # to the data axes so logits chunks never replicate.
+    @jax.checkpoint
+    def chunk_ce(args):
+        h, t = args
+        lg = (h @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, jnp.maximum(t, 0)[:, None], axis=-1)[:, 0]
+        valid = t >= 0
+        return jnp.where(valid, lse - tgt, 0.0).sum(), valid.sum()
+
+    hs = constrain_batch(hidden2.reshape(n_chunks, vocab_chunk, d))
+    ts = constrain_batch(tflat.reshape(n_chunks, vocab_chunk))
+    sums, counts = jax.lax.map(chunk_ce, (hs, ts))
+    loss = sums.sum() / jnp.maximum(counts.sum(), 1)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux, "tokens": counts.sum()}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        caches = [_layer_cache(cfg, batch, max_len) for _ in range(cfg.n_layers)]
+        return jax.tree.map(lambda *a: jnp.stack(a), *caches)
+    if cfg.family == "ssm":
+        kinds = _xlstm_block_kinds(cfg)
+        return [xlstm_mod.mlstm_init_cache(batch, cfg.n_heads, cfg.hd)
+                if k == "mlstm" else
+                xlstm_mod.slstm_init_cache(batch, cfg.n_heads, cfg.hd)
+                for k in kinds]
+    if cfg.family == "hybrid":
+        g, n_groups, _ = _hybrid_layout(cfg)
+        attn_c = [attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.hd,
+                                      _dt(cfg)) for _ in range(n_groups)]
+        mamba_c = [[ssm_mod.mamba2_init_cache(batch, cfg.d_model, cfg.ssm)
+                    for _ in range(g)] for _ in range(n_groups)]
+        return {
+            "attn": jax.tree.map(lambda *a: jnp.stack(a), *attn_c),
+            "mamba": jax.tree.map(
+                lambda *a: jnp.stack(a),
+                *[jax.tree.map(lambda *b: jnp.stack(b), *row) for row in mamba_c]),
+        }
+    raise ValueError(cfg.family)
+
+
+def _stacked_layer_step(params, x, cfg, caches, pos0, q_chunk,
+                        scan_layers=True):
+    """Scan over stacked transformer layers threading per-layer caches."""
+    def body(x, xs):
+        lp, c = xs
+        x, nc, _ = _apply_tf_layer(lp, x, cfg, cache=c, pos0=pos0, q_chunk=q_chunk)
+        return x, nc
+    if scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+        return x, new_caches
+    ncs = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        c = jax.tree.map(lambda a: a[i], caches)
+        x, nc = body(x, (lp, c))
+        ncs.append(nc)
+    return x, jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+
+
+def prefill(params, batch, cfg: ArchConfig, cache, *, q_chunk: int | None = Q_CHUNK,
+            scan_layers: bool = True):
+    """Process the prompt, filling the cache from position 0.  Returns
+    (last-position logits, cache)."""
+    x = _embed_inputs(params, batch, cfg)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        x, cache = _stacked_layer_step(params, x, cfg, cache, 0, q_chunk,
+                                       scan_layers)
+    elif cfg.family == "ssm":
+        x, cache, _ = _apply_xlstm(params, x, cfg, caches=cache)
+    else:
+        x, cache, _ = _apply_hybrid(params, x, cfg, caches=cache, pos0=0,
+                                    q_chunk=q_chunk, scan_groups=scan_layers)
+    h = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    return logits_fn(params, h, cfg)[:, 0], cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *,
+                scan_layers: bool = True):
+    """One decode step: tokens (B,) int32, pos scalar int32 (current length).
+    Returns (logits (B, V), new cache)."""
+    batch = {"tokens": tokens[:, None]}
+    x = _embed_inputs(params, batch, cfg)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        x, cache = _stacked_layer_step(params, x, cfg, cache, pos, None,
+                                       scan_layers)
+    elif cfg.family == "ssm":
+        x, cache, _ = _apply_xlstm(params, x, cfg, caches=cache)
+    else:
+        x, cache, _ = _apply_hybrid(params, x, cfg, caches=cache, pos0=pos,
+                                    q_chunk=None, scan_groups=scan_layers)
+    h = apply_norm(params["final_norm"], x, cfg.norm)
+    return logits_fn(params, h, cfg)[:, 0], cache

@@ -1,0 +1,170 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with recurrent gating, sequential scan).
+
+mLSTM is linear-attention-like, so train/prefill use a chunkwise algorithm
+(intra-chunk quadratic with log-gate decay matrix, inter-chunk recurrence of
+the (hd x hd) matrix memory); decode is an O(1) state update.  sLSTM has a
+true nonlinear recurrence through the hidden state (recurrent weights R), so
+it is a lax.scan over time in all modes — this is inherent to the
+architecture, not an implementation shortcut.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import XLSTMCfg
+from repro.models.layers import dense_init, dense, norm_init, apply_norm
+
+__all__ = [
+    "mlstm_init", "mlstm_apply", "mlstm_init_cache",
+    "slstm_init", "slstm_apply", "slstm_init_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d: int, n_heads: int, hd: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d, n_heads * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d, n_heads * hd, dtype=dtype),
+        "wi": dense_init(ks[3], d, n_heads, dtype=dtype),   # input gate (exp)
+        "wf": dense_init(ks[4], d, n_heads, dtype=dtype),   # forget gate
+        "out_norm": norm_init(n_heads * hd),
+        "wo": dense_init(ks[5], n_heads * hd, d, dtype=dtype),
+    }
+
+
+def mlstm_init_cache(batch: int, n_heads: int, hd: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk(state, inputs, hd: int):
+    """One chunk of the stabilised chunkwise mLSTM.
+    q,k,v: (B,L,H,hd); logi,logf: (B,L,H)."""
+    C, n, m = state
+    q, k, v, logi, logf = inputs
+    f32 = jnp.float32
+    q, k, v = q.astype(f32) / np.sqrt(hd), k.astype(f32), v.astype(f32)
+    cumf = jnp.cumsum(logf, axis=1)                     # (B,L,H) inclusive
+    # log weight of source s at target t (s<=t): cumf_t - cumf_s + logi_s
+    lw = cumf[:, :, None, :] - cumf[:, None, :, :] + logi[:, None, :, :]
+    L = q.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    lw = jnp.where(mask, lw, -jnp.inf)
+    # carried-state weight at target t: cumf_t + m  (m is the running max)
+    lw_state = cumf + m[:, None, :]
+    m_new_t = jnp.maximum(lw.max(axis=2), lw_state)     # (B,L,H) per-target max
+    w = jnp.exp(lw - m_new_t[:, :, None, :])            # (B,t,s,H)
+    w_state = jnp.exp(lw_state - m_new_t)               # (B,L,H)
+
+    qk = jnp.einsum("btkh,bskh->btsk", q.reshape(q.shape[:2] + (-1, hd)),
+                    k.reshape(k.shape[:2] + (-1, hd)))  # (B,t,s,H)
+    num_intra = jnp.einsum("btsh,bshd->bthd", qk * w, v)
+    num_state = jnp.einsum("bthd,bhde->bthe", q, C) * w_state[..., None]
+    # Normaliser: n_t = sum_s w_ts k_s accumulated, then dotted with q_t.
+    ksum = jnp.einsum("btsh,bshd->bthd", w, k)          # (B,t,H,hd)
+    den = jnp.einsum("bthd,bthd->bth", q, ksum) + \
+          jnp.einsum("bthd,bhd->bth", q, n) * w_state
+    h = (num_intra + num_state) / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+    # State carry to next chunk.
+    mc = m_new_t[:, -1]                                  # (B,H) new running max
+    dec_state = jnp.exp(cumf[:, -1] + m - mc)            # (B,H)
+    src_w = jnp.exp(cumf[:, -1][:, None, :] - cumf + logi - mc[:, None, :])
+    C_new = dec_state[..., None, None] * C + \
+        jnp.einsum("bsh,bshd,bshe->bhde", src_w, k, v)
+    n_new = dec_state[..., None] * n + jnp.einsum("bsh,bshd->bhd", src_w, k)
+    return (C_new, n_new, mc), h
+
+
+def mlstm_apply(p, x, *, n_heads: int, hd: int, chunk: int = 64, cache=None):
+    B, T, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, T, n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, T, n_heads, hd)
+    v = dense(p["wv"], x).reshape(B, T, n_heads, hd)
+    logi = dense(p["wi"], x).astype(jnp.float32)         # log input gate
+    logf = jax.nn.log_sigmoid(dense(p["wf"], x).astype(jnp.float32))
+
+    st = (cache["C"], cache["n"], cache["m"]) if cache is not None else \
+        (jnp.zeros((B, n_heads, hd, hd), jnp.float32),
+         jnp.zeros((B, n_heads, hd), jnp.float32),
+         jnp.full((B, n_heads), -1e30, jnp.float32))
+
+    Lc = min(chunk, T)
+    nc = T // Lc
+    assert nc * Lc == T, "sequence must divide by mlstm chunk"
+
+    def rs(a):
+        return jnp.moveaxis(a.reshape((B, nc, Lc) + a.shape[2:]), 1, 0)
+
+    (C, n, m), hs = jax.lax.scan(
+        lambda s, i: _mlstm_chunk(s, i, hd), st,
+        (rs(q), rs(k), rs(v), rs(logi), rs(logf)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, n_heads * hd).astype(x.dtype)
+    h = apply_norm(p["out_norm"], h)
+    out = dense(p["wo"], h)
+    new_cache = {"C": C, "n": n, "m": m} if cache is not None else None
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d: int, n_heads: int, hd: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    # 4 gates (i, f, z, o), feedforward W and block-diagonal recurrent R.
+    return {
+        "w": dense_init(ks[0], d, 4 * n_heads * hd, dtype=dtype),
+        "r": (jax.random.normal(ks[1], (n_heads, hd, 4 * hd), jnp.float32)
+              / np.sqrt(hd)).astype(dtype),
+        "out_norm": norm_init(n_heads * hd),
+        "wo": dense_init(ks[2], n_heads * hd, d, dtype=dtype),
+    }
+
+
+def slstm_init_cache(batch: int, n_heads: int, hd: int):
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((batch, n_heads, hd), jnp.float32)}
+
+
+def slstm_apply(p, x, *, n_heads: int, hd: int, cache=None):
+    B, T, _ = x.shape
+    wx = dense(p["w"], x).reshape(B, T, n_heads, 4 * hd).astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+
+    def step(state, wxt):
+        c, n, h, m = state
+        rec = jnp.einsum("bkd,kdf->bkf", h, r)            # (B,H,4hd)
+        g = wxt + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        # stabilised exponential gating
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(logf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    st = ((cache["c"], cache["n"], cache["h"], cache["m"]) if cache is not None
+          else tuple(jnp.zeros((B, n_heads, hd), jnp.float32) for _ in range(4)))
+    (c, n, h, m), hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, T, n_heads * hd).astype(x.dtype)
+    out = dense(p["wo"], apply_norm(p["out_norm"], out))
+    new_cache = ({"c": c, "n": n, "h": h, "m": m} if cache is not None else None)
+    return out, new_cache

@@ -1,0 +1,9 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptState
+from repro.optim.schedule import cosine_warmup
+from repro.optim.grad_compress import (int8_compress, int8_decompress,
+                                       topk_compress, topk_decompress,
+                                       compressed_psum)
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "cosine_warmup",
+           "int8_compress", "int8_decompress", "topk_compress",
+           "topk_decompress", "compressed_psum"]

@@ -1,0 +1,16 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup"]
+
+
+def cosine_warmup(step, *, lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,5 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import rebuild_mesh, reshard
+
+__all__ = ["CheckpointManager", "StragglerMonitor", "rebuild_mesh", "reshard"]

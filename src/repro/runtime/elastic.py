@@ -1,0 +1,46 @@
+"""Elastic scaling: rebuild the mesh from the surviving device set and
+re-shard live state onto it.
+
+On a device/host failure the controller (launch/train.py) catches the
+error, queries ``jax.devices()`` again, calls ``rebuild_mesh`` to get the
+largest usable (data, model) grid, re-shards the last checkpoint (or the
+live state, if intact) with ``reshard``, re-partitions the batch via
+POPTA/HPOPTA, and resumes.  The deterministic data pipeline (keyed by step)
+makes the resumed stream identical regardless of the new topology.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["rebuild_mesh", "reshard", "largest_grid"]
+
+
+def largest_grid(n_devices: int, model_axis: int) -> tuple[int, int]:
+    """Largest (data, model) grid using <= n_devices, preserving the model
+    axis if possible (TP degree is fixed by the model's sharding), else the
+    largest power-of-two model axis that fits."""
+    while model_axis > 1 and n_devices < model_axis:
+        model_axis //= 2
+    data = max(1, n_devices // model_axis)
+    return data, model_axis
+
+
+def rebuild_mesh(devices: Sequence[Any] | None = None, *,
+                 model_axis: int = 16) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    data, model = largest_grid(len(devices), model_axis)
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard(tree: Any, mesh: Mesh, pspecs: Any) -> Any:
+    """Move a (possibly differently-sharded or host-local) pytree onto
+    ``mesh`` with the given PartitionSpecs."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, pspecs)

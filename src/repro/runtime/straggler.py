@@ -1,0 +1,69 @@
+"""Straggler detection + FPM-based work re-partitioning.
+
+At pod scale a host that slows down (thermal throttle, failing HBM, noisy
+neighbour) drags every synchronous step.  The monitor keeps an EWMA of each
+group's observed step time; when a group drifts past ``threshold`` x the
+median, it synthesises *degraded speed functions* (observed slowdown folded
+into the group's FPM) and re-runs HPOPTA — i.e. the paper's heterogeneous
+partitioning case applied online.  The caller applies the new distribution
+at the next checkpointable boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.fpm import FPMSet, SpeedFunction
+from repro.core.partition import PartitionResult, hpopta
+
+__all__ = ["StragglerMonitor"]
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_groups: int
+    alpha: float = 0.2          # EWMA factor
+    threshold: float = 1.3      # drift multiple of the median that triggers
+
+    def __post_init__(self):
+        self._ewma = np.full(self.n_groups, np.nan)
+
+    def record(self, group: int, step_time: float) -> None:
+        if np.isnan(self._ewma[group]):
+            self._ewma[group] = step_time
+        else:
+            self._ewma[group] = (self.alpha * step_time
+                                 + (1 - self.alpha) * self._ewma[group])
+
+    @property
+    def ewma(self) -> np.ndarray:
+        return self._ewma.copy()
+
+    def slow_groups(self) -> list[int]:
+        if np.any(np.isnan(self._ewma)):
+            return []
+        med = float(np.median(self._ewma))
+        return [i for i, t in enumerate(self._ewma) if t > self.threshold * med]
+
+    def relative_speeds(self) -> np.ndarray:
+        """Normalised observed speeds (1.0 = median group)."""
+        med = float(np.median(self._ewma))
+        return med / self._ewma
+
+    def repartition(self, base_fpm: SpeedFunction, n_rows: int,
+                    y: int) -> PartitionResult | None:
+        """If stragglers exist, scale the baseline FPM by each group's
+        observed relative speed and re-run HPOPTA.  Returns None when no
+        repartition is needed (keeps the current distribution stable)."""
+        if not self.slow_groups():
+            return None
+        rel = self.relative_speeds()
+        fpms = FPMSet([
+            SpeedFunction(base_fpm.xs, base_fpm.ys, base_fpm.speed * rel[i],
+                          name=f"group{i}")
+            for i in range(self.n_groups)
+        ])
+        curves = [f.time_curve(n_rows, y) for f in fpms]
+        return hpopta(curves, n_rows)

@@ -1,0 +1,5 @@
+from repro.train.step import TrainState, make_train_step, make_serve_step, init_train_state
+from repro.train.fpm_schedule import choose_schedule, fpm_batch_partition
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step",
+           "init_train_state", "choose_schedule", "fpm_batch_partition"]

@@ -1,0 +1,115 @@
+"""train_step / serve_step builders.
+
+train_step: microbatched grad accumulation (scan over microbatches — this
+is also what bounds MoE dispatch and attention score memory), global-norm
+clip, AdamW, cosine-warmup schedule, optional int8 error-feedback gradient
+compression (the cross-pod bandwidth saver; the quantisation is applied to
+the accumulated gradient exactly as the pod-boundary reduction would see
+it).
+
+serve_step: one decode token against the KV cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, TrainCfg
+from repro.models import transformer as model
+from repro.optim.adamw import OptState, adamw_init, adamw_update
+from repro.optim.grad_compress import error_feedback_update
+from repro.optim.schedule import cosine_warmup
+
+__all__ = ["TrainState", "init_train_state", "make_train_step", "make_serve_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    residual: Any  # error-feedback residuals (empty dict when compression off)
+
+
+def init_train_state(key, cfg: ArchConfig, tcfg: TrainCfg) -> TrainState:
+    params = model.init_params(key, cfg)
+    opt = adamw_init(params)
+    residual = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                if tcfg.grad_compress != "none" else {})
+    return TrainState(params, opt, residual)
+
+
+def _split_microbatches(batch, n: int):
+    def rs(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by microbatches {n}"
+        return jnp.moveaxis(x.reshape((n, b // n) + x.shape[1:]), 0, 0)
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainCfg, grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_shardings``: optional pytree of NamedSharding matching params.
+    Pinning the grad-accumulation carry to the parameter sharding makes the
+    per-microbatch gradient reduction a reduce-scatter into FSDP shards
+    instead of a replicated all-reduce (see EXPERIMENTS.md §Perf) — without
+    it XLA may carry fully-replicated f32 gradients through the scan.
+    """
+
+    def loss_of(params, mb):
+        loss, metrics = model.loss_fn(params, mb, cfg, remat=tcfg.remat)
+        return loss, metrics
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, grad_shardings)
+
+    def train_step(state: TrainState, batch):
+        nmb = tcfg.microbatches
+        mbs = _split_microbatches(batch, nmb)
+        zero_g = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state.params))
+
+        def acc(carry, mb):
+            gsum, lsum = carry
+            (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                state.params, mb)
+            g = pin(g)
+            gsum = pin(jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g))
+            return (gsum, lsum + loss), None
+
+        (gsum, lsum), _ = jax.lax.scan(acc, (zero_g, jnp.zeros((), jnp.float32)),
+                                       mbs)
+        grads = jax.tree.map(lambda g: g / nmb, gsum)
+
+        if tcfg.grad_compress != "none":
+            pairs = jax.tree.map(
+                functools.partial(error_feedback_update,
+                                  codec=tcfg.grad_compress),
+                grads, state.residual)
+            grads = jax.tree.map(lambda t: t[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            residual = jax.tree.map(lambda t: t[1], pairs,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            residual = state.residual
+
+        lr = cosine_warmup(state.opt.step, lr=tcfg.lr, warmup=tcfg.warmup,
+                           total=tcfg.total_steps)
+        params, opt, om = adamw_update(grads, state.opt, state.params, tcfg, lr)
+        metrics = {"loss": lsum / nmb, "lr": lr, **om}
+        return TrainState(params, opt, residual), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """serve_step(params, cache, tokens (B,), pos ()) -> (logits, cache)."""
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, cfg)
+    return serve_step

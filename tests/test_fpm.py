@@ -1,0 +1,95 @@
+"""Unit + property tests for functional performance models."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpm import (FPMSet, SpeedFunction, build_fpm, fft_flops,
+                            load_fpms, save_fpms)
+
+
+def make_fn(scale=1.0, name="P"):
+    xs = np.array([1, 2, 4, 8, 16])
+    ys = np.array([16, 32, 64, 128])
+    speed = scale * np.outer(xs, np.log2(ys)) + 1.0
+    return SpeedFunction(xs, ys, speed, name=name)
+
+
+def test_validation_rejects_bad_grids():
+    with pytest.raises(ValueError):
+        SpeedFunction(np.array([2, 1]), np.array([16]), np.ones((2, 1)))
+    with pytest.raises(ValueError):
+        SpeedFunction(np.array([1, 2]), np.array([16]), -np.ones((2, 1)))
+    with pytest.raises(ValueError):
+        SpeedFunction(np.array([1, 2]), np.array([16]), np.ones((3, 1)))
+
+
+def test_section_matches_grid_points():
+    f = make_fn()
+    for j, y in enumerate(f.ys):
+        np.testing.assert_allclose(f.section_y(int(y)), f.speed[:, j])
+    for i, x in enumerate(f.xs):
+        np.testing.assert_allclose(f.section_x(int(x)), f.speed[i, :])
+
+
+def test_speed_at_interpolates_between_grid():
+    f = make_fn()
+    s_lo = f.speed_at(1, 16)
+    s_hi = f.speed_at(2, 16)
+    mid = f.speed_at(1.5, 16)
+    assert min(s_lo, s_hi) <= mid <= max(s_lo, s_hi)
+
+
+def test_time_zero_rows_is_zero():
+    f = make_fn()
+    assert f.time_at(0, 64) == 0.0
+    assert f.time_curve(10, 64)[0] == 0.0
+
+
+def test_time_curve_consistent_with_time_at():
+    f = make_fn()
+    tc = f.time_curve(16, 64)
+    for x in [1, 4, 8, 16]:
+        np.testing.assert_allclose(tc[x], f.time_at(x, 64), rtol=1e-9)
+
+
+def test_nan_points_are_skipped():
+    xs = np.array([1, 2, 4])
+    ys = np.array([16, 32])
+    sp = np.array([[1.0, np.nan], [2.0, 2.0], [4.0, 4.0]])
+    f = SpeedFunction(xs, ys, sp)
+    assert np.isfinite(f.time_at(2, 32))
+
+
+def test_variation_and_average():
+    s = FPMSet([make_fn(1.0), make_fn(2.0)])
+    assert s.max_variation_at_plane(64) > 0.5
+    avg = s.averaged()
+    expected = 2.0 / (1.0 / s[0].speed + 1.0 / s[1].speed)  # harmonic mean
+    np.testing.assert_allclose(avg.speed, expected, rtol=1e-12)
+    ident = FPMSet([make_fn(1.0), make_fn(1.0)])
+    assert ident.max_variation_at_plane(64) == 0.0
+
+
+def test_build_and_roundtrip(tmp_path):
+    f = build_fpm([1, 2], [16, 32], lambda x, y: x * y * 1e-6, name="bench")
+    s = FPMSet([f, make_fn()])
+    p = str(tmp_path / "fpm.npz")
+    save_fpms(p, s)
+    s2 = load_fpms(p)
+    assert s2.p == 2
+    np.testing.assert_allclose(s2[0].speed, s[0].speed)
+    assert s2[0].name == "bench"
+
+
+def test_build_marks_unmeasurable_as_nan():
+    f = build_fpm([1], [16, 32], lambda x, y: float("inf") if y == 32 else 1.0)
+    assert np.isnan(f.speed[0, 1])
+
+
+@given(x=st.integers(1, 100), y=st.sampled_from([16, 64, 256, 1024]))
+@settings(max_examples=50, deadline=None)
+def test_fft_flops_positive_monotone(x, y):
+    assert fft_flops(x, y) > 0
+    assert fft_flops(x + 1, y) > fft_flops(x, y)
+    assert fft_flops(x, 2 * y) > fft_flops(x, y)

@@ -1,0 +1,55 @@
+"""Launcher-layer unit tests (no 512-device compiles here — the heavy path
+is exercised by the dry-run sweeps; see EXPERIMENTS.md §Dry-run)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import dryrun
+from repro.models.sharding import embed_dshard
+
+
+def test_drop_fsdp_transform():
+    specs = {"a": P("data", "model"), "b": P(("pod", "data"), None),
+             "c": P("model", "data"), "d": P(None)}
+    out = dryrun._drop_fsdp(specs)
+    assert out["a"] == P(None, "model")
+    assert out["b"] == P("pod", None)
+    assert out["c"] == P("model", None)
+    assert out["d"] == P(None)
+
+
+def test_embed_dshard_only_touches_tables():
+    params = {"embed": {"table": jax.ShapeDtypeStruct((64, 8), jnp.float32)},
+              "layers": {"attn": {"wq": {"w": jax.ShapeDtypeStruct((8, 8),
+                                                                   jnp.float32)}}}}
+    specs = {"embed": {"table": P("model", None)},
+             "layers": {"attn": {"wq": {"w": P("data", "model")}}}}
+    out = embed_dshard(specs, params)
+    assert out["embed"]["table"] == P(None, "model")
+    assert out["layers"]["attn"]["wq"]["w"] == P("data", "model")
+
+
+def test_train_cfg_microbatches_divide():
+    from repro.configs.base import SHAPES
+    from repro.models.registry import get_config
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config("dbrx_132b")
+    tcfg = dryrun._train_cfg_for(cfg, SHAPES["train_4k"], FakeMesh())
+    assert SHAPES["train_4k"].global_batch % tcfg.microbatches == 0
+    assert SHAPES["train_4k"].global_batch // tcfg.microbatches >= 16
+
+
+def test_cell_plan_covers_all_archs():
+    cells = dryrun.cell_plan()
+    archs = {a for a, _ in cells}
+    from repro.models.registry import ARCH_IDS
+    assert archs == set(ARCH_IDS)
+    # every arch has at least train + prefill
+    for a in ARCH_IDS:
+        shapes = {s for ar, s in cells if ar == a}
+        assert {"train_4k", "prefill_32k"} <= shapes

@@ -1,0 +1,43 @@
+"""Padding-selection (Determine_Pad_Length) properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpm import SpeedFunction
+from repro.core.padding import (determine_pad_length, is_smooth,
+                                pad_to_smooth, smooth_candidates)
+
+
+def test_pad_picks_faster_larger_size():
+    xs = np.array([1, 8])
+    ys = np.array([100, 128, 200])
+    # speed at y=128 is so high that 8 rows of len 128 beat 8 rows of len 100
+    sp = np.array([[1.0, 100.0, 1.0], [1.0, 100.0, 1.0]])
+    f = SpeedFunction(xs, ys, sp)
+    assert determine_pad_length(f, 8, 100) == 128
+
+
+def test_pad_zero_when_no_benefit():
+    xs = np.array([1, 8])
+    ys = np.array([100, 128, 200])
+    sp = np.ones((2, 3))  # flat speed: larger y always costs more time
+    f = SpeedFunction(xs, ys, sp)
+    assert determine_pad_length(f, 8, 100) == 100
+    assert determine_pad_length(f, 0, 100) == 100  # idle processor
+
+
+@given(n=st.integers(1, 4096))
+@settings(max_examples=80, deadline=None)
+def test_smooth_candidates_properties(n):
+    c = smooth_candidates(n)
+    assert len(c) >= 1
+    assert np.all(c >= n)
+    assert np.all(np.diff(c) > 0)
+    p = pad_to_smooth(n)
+    assert p >= n
+    assert p == c[0]
+
+
+def test_is_smooth():
+    assert is_smooth(128) and is_smooth(3 * 128) and is_smooth(640)
+    assert not is_smooth(127) and not is_smooth(7 * 128 // 7 * 7)

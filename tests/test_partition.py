@@ -1,0 +1,103 @@
+"""POPTA/HPOPTA: exactness against brute force (hypothesis), invariants."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpm import FPMSet, SpeedFunction
+from repro.core.partition import hpopta, lb_partition, popta, partition_rows
+
+
+def brute_force_makespan(curves, n):
+    p = len(curves)
+    best = float("inf")
+    for combo in itertools.product(range(n + 1), repeat=p - 1):
+        if sum(combo) > n:
+            continue
+        d = list(combo) + [n - sum(combo)]
+        t = max(curves[i][d[i]] for i in range(p))
+        best = min(best, t)
+    return best
+
+
+@given(
+    n=st.integers(4, 14),
+    p=st.integers(2, 3),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_hpopta_is_optimal_vs_bruteforce(n, p, seed):
+    rng = np.random.default_rng(seed)
+    curves = []
+    for _ in range(p):
+        t = np.abs(rng.normal(1.0, 0.7, n + 1)).cumsum()  # increasing-ish
+        t += rng.random(n + 1) * 2.0                       # plus variation
+        t[0] = 0.0
+        curves.append(t)
+    res = hpopta(curves, n)
+    assert res.d.sum() == n
+    assert np.all(res.d >= 0)
+    achieved = max(curves[i][res.d[i]] for i in range(p))
+    np.testing.assert_allclose(achieved, res.tau, rtol=1e-12)
+    np.testing.assert_allclose(res.tau, brute_force_makespan(curves, n),
+                               rtol=1e-12)
+
+
+def test_hpopta_prefers_faster_processor():
+    n = 30
+    base = np.linspace(0, 10, n + 1)
+    fast, slow = base.copy(), 3 * base
+    fast[0] = slow[0] = 0.0
+    res = hpopta([fast, slow], n)
+    assert res.d[0] > res.d[1]
+
+
+def test_hpopta_exploits_nonmonotonic_profile():
+    """The paper's core claim: optimum may be load-IMBALANCED.  Processor 0
+    has a performance cliff at x=5..9 (slow zone); the optimum avoids it."""
+    n = 12
+    t0 = np.linspace(0, 2.0, n + 1)
+    t0[5:10] = 50.0   # cliff
+    t0[0] = 0.0
+    t1 = np.linspace(0, 4.0, n + 1)
+    res = hpopta([t0, t1], n)
+    assert not (5 <= res.d[0] <= 9)
+    assert res.tau < 10.0
+
+
+def test_popta_equals_hpopta_on_identical():
+    n = 20
+    t = np.sqrt(np.arange(n + 1.0))
+    a = popta(t, 3, n)
+    b = hpopta([t, t, t], n)
+    assert a.tau == b.tau
+    assert a.method == "POPTA"
+
+
+def test_infeasible_raises():
+    t = np.full(11, np.inf)
+    t[0] = 0.0
+    with pytest.raises(ValueError):
+        hpopta([t, t], 10)
+
+
+def test_lb_partition_even():
+    r = lb_partition(10, 3)
+    assert sorted(r.d.tolist()) == [3, 3, 4]
+    assert r.d.sum() == 10
+
+
+def test_partition_rows_dispatch():
+    xs = np.array([1, 4, 8, 16, 32])
+    ys = np.array([16, 32, 64])
+    v = np.outer(xs, np.log2(ys)) + 5.0
+    ident = FPMSet([SpeedFunction(xs, ys, v), SpeedFunction(xs, ys, v)])
+    r = partition_rows(32, ident, eps=0.05, y=32)
+    assert r.method == "POPTA"
+    hetero = FPMSet([SpeedFunction(xs, ys, v), SpeedFunction(xs, ys, 2 * v)])
+    r = partition_rows(32, hetero, eps=0.05, y=32)
+    assert r.method == "HPOPTA"
+    assert r.d[1] > r.d[0]  # processor 1 is 2x faster
+    assert r.d.sum() == 32

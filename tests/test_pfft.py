@@ -1,0 +1,157 @@
+"""PFFT algorithms vs oracles: exactness of LB/FPM/CZT, padded semantics of
+PAD, plan API, and the naive-DFT cross-check of the FFT substrate."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FPMSet, SpeedFunction, czt_dft, pfft_fpm,
+                        pfft_fpm_czt, pfft_fpm_pad, pfft_lb, plan_pfft)
+from repro.fft import dft1d_naive, dft2d_naive, fft1d_stockham, fft2d_rowcol
+
+
+def fpms_for(n, p=3, hetero=True):
+    xs = np.array(sorted({1, max(n // 8, 1), max(n // 4, 1), max(n // 2, 1), n}))
+    ys = np.array(sorted({n // 2, n, n + 64, 2 * n}))
+    sp = np.outer(xs, np.log2(np.maximum(ys, 2))) + 3.0
+    fns = [SpeedFunction(xs, ys, sp * (i + 1 if hetero else 1), name=f"P{i}")
+           for i in range(p)]
+    return FPMSet(fns)
+
+
+def random_signal(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal((n, n))
+                        + 1j * rng.standard_normal((n, n))).astype(np.complex64))
+
+
+def test_fft1d_stockham_vs_naive_dft():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray((rng.standard_normal((4, 32))
+                     + 1j * rng.standard_normal((4, 32))).astype(np.complex64))
+    np.testing.assert_allclose(np.asarray(fft1d_stockham(x)),
+                               np.asarray(dft1d_naive(x)), atol=2e-3)
+
+
+def test_fft1d_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        fft1d_stockham(jnp.ones(12, jnp.complex64))
+
+
+def test_fft2d_rowcol_vs_naive():
+    m = random_signal(16)
+    np.testing.assert_allclose(np.asarray(fft2d_rowcol(m)),
+                               np.asarray(dft2d_naive(m)), atol=2e-2)
+
+
+@pytest.mark.parametrize("n,p", [(32, 2), (64, 3), (48, 4)])
+def test_pfft_lb_exact(n, p):
+    m = random_signal(n)
+    np.testing.assert_allclose(np.asarray(pfft_lb(m, p)),
+                               np.asarray(jnp.fft.fft2(m)), atol=1e-2)
+
+
+@pytest.mark.parametrize("n", [32, 64])
+def test_pfft_fpm_exact(n):
+    m = random_signal(n)
+    out, part = pfft_fpm(m, fpms_for(n), return_partition=True)
+    assert part.d.sum() == n
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.fft.fft2(m)),
+                               atol=1e-2)
+
+
+def test_pfft_fpm_pad_padded_semantics():
+    """PAD computes the padded-signal DFT cropped to N bins (paper Alg. 7
+    semantics).  Validate against exactly that oracle."""
+    n = 32
+    m = random_signal(n)
+    out, part, pads = pfft_fpm_pad(m, fpms_for(n), return_partition=True)
+
+    def padded_phase(mat):
+        segs, off = [], 0
+        for i, d in enumerate(part.d):
+            if d == 0:
+                continue
+            seg = mat[off:off + d]
+            np_i = int(pads[i])
+            if np_i > n:
+                seg = jnp.pad(seg, ((0, 0), (0, np_i - n)))
+                segs.append(jnp.fft.fft(seg, axis=-1)[:, :n])
+            else:
+                segs.append(jnp.fft.fft(seg, axis=-1))
+            off += int(d)
+        return jnp.concatenate(segs, 0)
+
+    ref = padded_phase(padded_phase(m).T).T
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-2)
+
+
+@pytest.mark.parametrize("n", [32, 48])
+def test_pfft_fpm_czt_exact_despite_padding(n):
+    m = random_signal(n)
+    out = pfft_fpm_czt(m, fpms_for(n))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.fft.fft2(m)),
+                               atol=5e-2)
+
+
+@given(n=st.sampled_from([8, 12, 16, 27, 37]), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_czt_dft_property_any_length(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((2, n))
+                     + 1j * rng.standard_normal((2, n))).astype(np.complex64))
+    np.testing.assert_allclose(np.asarray(czt_dft(x)),
+                               np.asarray(jnp.fft.fft(x, axis=-1)), atol=5e-3)
+
+
+def test_czt_rejects_short_fft():
+    with pytest.raises(ValueError):
+        czt_dft(jnp.ones((1, 16), jnp.complex64), m_fft=16)
+
+
+def test_plan_api_all_methods():
+    n = 32
+    m = random_signal(n)
+    oracle = np.asarray(jnp.fft.fft2(m))
+    for method in ("lb", "fpm", "fpm-czt"):
+        plan = plan_pfft(n, p=3, fpms=fpms_for(n), method=method)
+        np.testing.assert_allclose(np.asarray(plan.execute(m)), oracle,
+                                   atol=5e-2)
+    plan = plan_pfft(n, fpms=fpms_for(n), method="fpm-pad")
+    assert plan.pad_lengths is not None
+    with pytest.raises(ValueError):
+        plan.execute(jnp.ones((n + 1, n + 1), jnp.complex64))
+    with pytest.raises(ValueError):
+        plan_pfft(n, method="lb")  # p required
+    with pytest.raises(ValueError):
+        plan_pfft(n, p=2, method="fpm")  # fpms required
+
+
+def test_parseval_property():
+    """Energy conservation: ||FFT(x)||^2 = N^2 ||x||^2 for the 2-D DFT."""
+    n = 64
+    m = random_signal(n, seed=7)
+    out = pfft_fpm(m, fpms_for(n))
+    lhs = float(jnp.sum(jnp.abs(out) ** 2))
+    rhs = float(n * n * jnp.sum(jnp.abs(m) ** 2))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3)
+
+
+def test_fft_rows_pallas_backend():
+    """The Pallas kernel is a drop-in backend for the PFFT row phases."""
+    from repro.fft.fft2d import fft_rows
+    from repro.core.pfft import segment_row_ffts
+    rng = np.random.default_rng(5)
+    m = jnp.asarray((rng.standard_normal((8, 64))
+                     + 1j * rng.standard_normal((8, 64))).astype(np.complex64))
+    ref = jnp.fft.fft(m, axis=-1)
+    np.testing.assert_allclose(np.asarray(fft_rows(m, backend="pallas")),
+                               np.asarray(ref), atol=2e-3)
+    out = segment_row_ffts(m, np.array([5, 3]), backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+    # non-pow2 lengths fall back to XLA
+    m2 = jnp.ones((4, 48), jnp.complex64)
+    np.testing.assert_allclose(np.asarray(fft_rows(m2, backend="pallas")),
+                               np.asarray(jnp.fft.fft(m2, axis=-1)), atol=2e-3)

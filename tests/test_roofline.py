@@ -1,0 +1,80 @@
+"""Roofline extraction: HLO collective parsing + term arithmetic."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.launch.roofline import (HW, RooflineTerms, collective_bytes,
+                                   model_flops, roofline_terms)
+
+HLO_SAMPLE = """
+HloModule test
+  %ag = bf16[128,1024]{1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(%p1), to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%p2), dimensions={0}
+  %a2a = bf16[16,32]{1,0} all-to-all(%p3), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%p4), source_target_pairs={{0,1}}
+  %ags = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-gather-start(%p5)
+  %agd = bf16[8,8]{1,0} all-gather-done(%ags)
+  %dot = f32[32,32]{1,0} dot(%p6, %p7)
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    got = collective_bytes(HLO_SAMPLE)
+    assert got["all-gather"] == 128 * 1024 * 2 + 8 * 8 * 2 * 2  # incl. -start
+    assert got["all-reduce"] == 256 * 4
+    assert got["reduce-scatter"] == 64 * 64 * 4
+    assert got["all-to-all"] == 16 * 32 * 2
+    assert got["collective-permute"] == 100
+    # dot and -done must not be counted
+    assert set(got) == {"all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"}
+
+
+def test_roofline_terms_math():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    terms = roofline_terms(cost, HLO_SAMPLE, chips=4, mflops=100e12)
+    assert terms.compute_s == pytest.approx(1.0)
+    assert terms.memory_s == pytest.approx(1.0)
+    assert terms.collective_s > 0
+    assert terms.dominant in ("compute", "memory")
+    assert terms.flops == pytest.approx(4 * 197e12)
+    assert 0 < terms.roofline_fraction < 1
+    d = terms.to_dict()
+    assert d["dominant"] == terms.dominant
+
+
+def test_model_flops_kinds():
+    from repro.models.registry import get_config
+    cfg = get_config("internlm2_1_8b")
+    n = int(2e9)
+    tr = model_flops(cfg, SHAPES["train_4k"], n)
+    pf = model_flops(cfg, SHAPES["prefill_32k"], n)
+    dec = model_flops(cfg, SHAPES["decode_32k"], n)
+    assert tr == 6.0 * n * 256 * 4096
+    assert pf == 2.0 * n * 32 * 32768
+    assert dec == 2.0 * n * 128
+
+
+def test_active_params_moe_less_than_total():
+    from repro.launch.roofline import active_param_count
+    from repro.models.registry import get_config
+    cfg = get_config("dbrx_132b")
+    total = 132_000_000_000
+    active = active_param_count(cfg, total)
+    assert active < total * 0.5   # top-4 of 16 experts
+    assert active > total * 0.1
+
+
+def test_cell_plan_skips():
+    from repro.launch import dryrun
+    cells = dryrun.cell_plan()
+    assert ("hubert_xlarge", "decode_32k") not in cells
+    assert ("hubert_xlarge", "long_500k") not in cells
+    assert ("hubert_xlarge", "prefill_32k") in cells
+    assert ("zamba2_7b", "long_500k") in cells
+    assert ("xlstm_125m", "long_500k") in cells
+    assert ("dbrx_132b", "long_500k") not in cells
+    # 31 runnable cells: 7 decoders x3 + 2 subquadratic x4 + hubert x2
+    assert len(cells) == 31
