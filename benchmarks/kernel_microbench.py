@@ -1,0 +1,139 @@
+"""Kernel-layer microbenchmarks -> BENCH_kernels.json.
+
+    PYTHONPATH=src python -m benchmarks.kernel_microbench [--quick] [--out F]
+
+Three comparisons, one JSON record each (plus structural facts the
+acceptance checks assert on):
+
+  radix        radix-2 vs radix-4 Stockham (same op, half the passes);
+               records stage counts from ``stockham_stage_count``.
+  fused        unfused (fft_rows_op + transpose_op, intermediate matrix)
+               vs fused ``fft_rows_transpose_op`` (one dispatch).
+  segments     looped per-segment ``segment_row_ffts`` vs the batched
+               one-dispatch-per-distinct-pad-length path; records the
+               dispatch counts from ``plan_segment_batches``.
+
+On this CPU container the Pallas kernels run in interpret mode, so the
+absolute times are not TPU times — the JSON exists to start the perf
+trajectory and to pin the structural wins (pass counts, dispatch counts)
+that carry to hardware.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import signal, time_fn
+from repro.core.pfft import plan_segment_batches, segment_row_ffts
+from repro.core.partition import lb_partition
+from repro.kernels.fft.kernel import stockham_stage_count
+from repro.kernels.fft.ops import fft_rows_op
+from repro.kernels.fused.ops import fft_rows_transpose_op
+from repro.kernels.transpose.ops import transpose_op
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
+
+
+def _rows_signal(rows: int, n: int, seed: int = 1) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal((rows, n))
+                        + 1j * rng.standard_normal((rows, n))
+                        ).astype(np.complex64))
+
+
+def bench_radix(sizes, rows: int) -> list[dict]:
+    recs = []
+    for n in sizes:
+        x = _rows_signal(rows, n)
+        for radix in (2, 4):
+            t = time_fn(lambda x=x, r=radix: fft_rows_op(x, radix=r))
+            recs.append({
+                "bench": "radix",
+                "n": int(n),
+                "rows": int(rows),
+                "radix": radix,
+                "stages": stockham_stage_count(n, radix),
+                "time_s": t,
+            })
+    return recs
+
+
+def bench_fused(sizes) -> list[dict]:
+    recs = []
+    for n in sizes:
+        m = signal(n, seed=2)
+
+        def unfused(m):
+            return transpose_op(fft_rows_op(m))
+
+        for name, fn in (("unfused", unfused), ("fused", fft_rows_transpose_op)):
+            t = time_fn(fn, m)
+            recs.append({
+                "bench": "fused",
+                "n": int(n),
+                "variant": name,
+                "dispatches_per_phase": 2 if name == "unfused" else 1,
+                "time_s": t,
+            })
+    return recs
+
+
+def bench_segments(n: int, p: int, pad_to: int) -> list[dict]:
+    m = signal(n, seed=3)
+    d = lb_partition(n, p).d
+    pads = np.array([pad_to if i % 2 else n for i in range(p)], dtype=np.int64)
+    plan = plan_segment_batches(d, pads, n)
+    recs = []
+    for name, batched in (("looped", False), ("batched", True)):
+        t = time_fn(lambda m=m, b=batched: segment_row_ffts(
+            m, d, pad_lengths=pads, batched=b))
+        recs.append({
+            "bench": "segments",
+            "n": int(n),
+            "p": int(p),
+            "distinct_pad_lengths": len(plan),
+            "dispatches": len(plan) if batched else int((np.asarray(d) > 0).sum()),
+            "variant": name,
+            "time_s": t,
+        })
+    return recs
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+    radix_sizes = [64, 256] if quick else [64, 256, 1024]
+    fused_sizes = [64, 128] if quick else [64, 128, 256]
+    records = (bench_radix(radix_sizes, rows=32 if quick else 64)
+               + bench_fused(fused_sizes)
+               + bench_segments(n=128 if quick else 256, p=4,
+                                pad_to=160 if quick else 320))
+    import jax
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() == "cpu",
+        "records": records,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in records:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"wrote {out} ({len(records)} records)")
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,7 +26,8 @@ sig = jnp.asarray(sig)
 
 for kw, label in [({}, "plain"),
                   ({"padded": "czt"}, "czt-padded (exact)"),
-                  ({"use_stockham": True}, "stockham local FFT")]:
+                  ({"use_stockham": True}, "stockham local FFT"),
+                  ({"pipeline_panels": 4}, "4-panel overlap pipeline")]:
     fn = make_pfft2_fn(mesh, N, "fft", **kw)
     out = fn(sig)
     err = float(jnp.max(jnp.abs(out - jnp.fft.fft2(sig))))

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point (mirrors ROADMAP.md "Tier-1 verify").
+#
+#   bash scripts/test.sh                 # full suite
+#   bash scripts/test.sh tests/test_fused.py -k radix   # pass-through args
+#
+# Env idiom per SNIPPETS.md (ClashLuke/olmax test.sh): fp64 enabled so the
+# float64/complex128 paths are exercised; PYTHONPATH points at src.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-1}"   # allow fp64
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -q "$@"

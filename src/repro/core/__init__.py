@@ -4,7 +4,8 @@ padding selection, and the PFFT-LB / PFFT-FPM / PFFT-FPM-PAD algorithms."""
 from repro.core.fpm import SpeedFunction, FPMSet, build_fpm, save_fpms, load_fpms, fft_flops
 from repro.core.partition import PartitionResult, popta, hpopta, lb_partition, partition_rows
 from repro.core.padding import determine_pad_length, smooth_candidates, pad_to_smooth, is_smooth
-from repro.core.pfft import pfft_lb, pfft_fpm, pfft_fpm_pad, pfft_fpm_czt, czt_dft
+from repro.core.pfft import (pfft_lb, pfft_fpm, pfft_fpm_pad, pfft_fpm_czt,
+                             czt_dft, segment_row_ffts, plan_segment_batches)
 from repro.core.api import plan_pfft, PfftPlan
 from repro.core.pfft3d import pfft3_lb, pfft3_fpm, pfft3_fpm_pad, pfft3_distributed
 
@@ -13,6 +14,7 @@ __all__ = [
     "PartitionResult", "popta", "hpopta", "lb_partition", "partition_rows",
     "determine_pad_length", "smooth_candidates", "pad_to_smooth", "is_smooth",
     "pfft_lb", "pfft_fpm", "pfft_fpm_pad", "pfft_fpm_czt", "czt_dft",
+    "segment_row_ffts", "plan_segment_batches",
     "plan_pfft", "PfftPlan",
     "pfft3_lb", "pfft3_fpm", "pfft3_fpm_pad", "pfft3_distributed",
 ]

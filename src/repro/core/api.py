@@ -49,7 +49,9 @@ class PfftPlan:
 
 def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
               method: Method = "fpm", eps: float = 0.05,
-              use_stockham: bool = False) -> PfftPlan:
+              use_stockham: bool = False, fused: bool = False) -> PfftPlan:
+    """``fused=True`` routes the unpadded limb phases through the fused
+    FFT->transpose Pallas dispatch (see DESIGN.md §Fused pipeline)."""
     if method == "lb":
         if p is None:
             raise ValueError("method='lb' requires p")
@@ -86,7 +88,8 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
         pl = pads
 
         def raw(m):
-            return _pfft_limb(m, d, pad_lengths=pl, use_stockham=use_stockham)
+            return _pfft_limb(m, d, pad_lengths=pl, use_stockham=use_stockham,
+                              fused=fused)
 
     return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
                     _fn=jax.jit(raw))

@@ -41,6 +41,7 @@ __all__ = [
     "pfft_fpm_czt",
     "czt_dft",
     "segment_row_ffts",
+    "plan_segment_batches",
 ]
 
 
@@ -49,15 +50,68 @@ def _segments(d: np.ndarray) -> list[tuple[int, int]]:
     return [(int(offs[i]), int(offs[i + 1])) for i in range(len(d))]
 
 
+def plan_segment_batches(d: np.ndarray, pad_lengths, n: int
+                         ) -> dict[int, np.ndarray]:
+    """Group the segments of distribution ``d`` by effective FFT length.
+
+    Returns {fft_length: row_indices}: all rows transformed at the same
+    length form one batch — one FFT dispatch per distinct *plan*, the
+    moral equivalent of the paper sharing an ``fftw_plan_many_dft`` across
+    same-shaped groups.  len(result) is the dispatch count of the batched
+    ``segment_row_ffts``.
+    """
+    groups: dict[int, list[np.ndarray]] = {}
+    for i, (lo, hi) in enumerate(_segments(d)):
+        if hi == lo:
+            continue
+        length = n
+        if pad_lengths is not None and int(pad_lengths[i]) > n:
+            length = int(pad_lengths[i])
+        groups.setdefault(length, []).append(np.arange(lo, hi, dtype=np.int64))
+    return {length: np.concatenate(idx) for length, idx in groups.items()}
+
+
 def segment_row_ffts(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
                      use_stockham: bool = False,
-                     backend: str | None = None) -> jnp.ndarray:
+                     backend: str | None = None,
+                     batched: bool = True) -> jnp.ndarray:
     """Step 2/4 of PFFT-FPM: processor i runs row FFTs on its d_i rows.
 
     ``pad_lengths[i]`` (optional) is N_padded for processor i; rows are
     zero-padded to that length, transformed, and cropped back to N bins.
+
+    ``batched=True`` (default) groups segments by pad length and issues one
+    FFT dispatch per distinct length (see ``plan_segment_batches``) instead
+    of one per processor — on p processors sharing a plan this turns p
+    kernel launches into one.  ``batched=False`` keeps the per-segment loop
+    (the paper's literal per-group calls; the microbenchmark compares both).
     """
     n = m.shape[-1]
+    if int(np.sum(np.asarray(d))) != m.shape[0]:
+        raise ValueError(
+            f"distribution sums to {int(np.sum(np.asarray(d)))} rows, "
+            f"matrix has {m.shape[0]}")
+    if batched:
+        plan = plan_segment_batches(d, pad_lengths, n)
+        if len(plan) == 1:
+            # Single plan covering every row in order: one dispatch, no
+            # gather/scatter at all.
+            (length, idx), = plan.items()
+            if len(idx) == m.shape[0] and np.array_equal(idx, np.arange(len(idx))):
+                if length > n:
+                    mp = jnp.pad(m, ((0, 0), (0, length - n)))
+                    return fft_rows(mp, use_stockham=use_stockham,
+                                    backend=backend)[:, :n]
+                return fft_rows(m, use_stockham=use_stockham, backend=backend)
+        out = jnp.zeros(m.shape, jnp.result_type(m, jnp.complex64))
+        for length, idx in plan.items():
+            rows = m[idx]
+            if length > n:
+                rows = jnp.pad(rows, ((0, 0), (0, length - n)))
+            res = fft_rows(rows, use_stockham=use_stockham,
+                           backend=backend)[:, :n]
+            out = out.at[idx].set(res)
+        return out
     outs = []
     for i, (lo, hi) in enumerate(_segments(d)):
         if hi == lo:
@@ -75,10 +129,28 @@ def segment_row_ffts(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
 
 
 def _pfft_limb(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
-               use_stockham: bool = False) -> jnp.ndarray:
-    """Paper Algorithm 3 (PFFT_LIMB): rows -> T -> rows -> T."""
+               use_stockham: bool = False, fused: bool = False) -> jnp.ndarray:
+    """Paper Algorithm 3 (PFFT_LIMB): rows -> T -> rows -> T.
+
+    ``fused=True`` runs each (row FFTs, transpose) phase as one fused
+    Pallas dispatch when the whole matrix shares a single plan (no
+    per-segment padding and power-of-two N) — segmentation is then purely
+    a scheduling notion, so the fused whole-matrix transform computes the
+    identical value with no intermediate HBM matrix.  Padded distributions
+    keep the batched segment path (the pad semantics are per-processor).
+    """
     if m.ndim != 2 or m.shape[0] != m.shape[1]:
         raise ValueError("PFFT operates on square N x N signal matrices")
+    if fused and pad_lengths is None:
+        # Segmentation without padding is purely a scheduling notion, so
+        # the whole-matrix fused phase computes the identical value.
+        # fft_rows_then_transpose itself falls back to the unfused
+        # computation when the kernel doesn't apply (non-pow2 N,
+        # dtypes wider than the f32 planes).
+        from repro.fft.fft2d import fft_rows_then_transpose
+        m = fft_rows_then_transpose(m)
+        m = fft_rows_then_transpose(m)
+        return m
     m = segment_row_ffts(m, d, pad_lengths=pad_lengths, use_stockham=use_stockham)
     m = m.T
     m = segment_row_ffts(m, d, pad_lengths=pad_lengths, use_stockham=use_stockham)
@@ -86,20 +158,21 @@ def _pfft_limb(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
     return m
 
 
-def pfft_lb(m: jnp.ndarray, p: int, *, use_stockham: bool = False) -> jnp.ndarray:
+def pfft_lb(m: jnp.ndarray, p: int, *, use_stockham: bool = False,
+            fused: bool = False) -> jnp.ndarray:
     """PFFT-LB (paper §III-B): even row distribution over p processors."""
     d = lb_partition(m.shape[0], p).d
-    return _pfft_limb(m, d, use_stockham=use_stockham)
+    return _pfft_limb(m, d, use_stockham=use_stockham, fused=fused)
 
 
 def pfft_fpm(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
-             use_stockham: bool = False,
+             use_stockham: bool = False, fused: bool = False,
              return_partition: bool = False):
     """PFFT-FPM (paper §III-C / Alg. 1): FPM-optimal (possibly imbalanced)
     row distribution, then the 4-step row-column pipeline."""
     n = m.shape[0]
     part: PartitionResult = partition_rows(n, fpms, eps)
-    out = _pfft_limb(m, part.d, use_stockham=use_stockham)
+    out = _pfft_limb(m, part.d, use_stockham=use_stockham, fused=fused)
     return (out, part) if return_partition else out
 
 

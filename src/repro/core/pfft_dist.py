@@ -3,7 +3,14 @@
 The paper's 4-step pipeline maps onto a 1-D pencil decomposition over a mesh
 axis: each device holds a contiguous block of rows; the paper's explicit
 transpose steps become ``all_to_all`` collectives (this is the dominant
-roofline term at pod scale — see EXPERIMENTS.md §Roofline).
+roofline term at pod scale — see DESIGN.md §Distributed pipeline).
+
+``pipeline_panels=k`` chunks each local phase into ``k`` row panels and
+software-pipelines them: panel ``i``'s ``all_to_all`` is issued before panel
+``i+1``'s local FFT, so the dataflow lets the compiler overlap the
+distributed transpose with compute instead of serializing the full-block
+FFT against the full-block exchange (see DESIGN.md §Compute/communication
+overlap).
 
     rows sharded (N/p, N) --local row FFT-->
     --all_to_all (split cols, concat rows) + local transpose-->
@@ -42,28 +49,70 @@ from repro.fft.fft2d import fft_rows
 __all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout"]
 
 
+def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
+               pad_len: int, use_stockham: bool,
+               backend: str | None) -> jnp.ndarray:
+    """Row FFTs on a local block under the selected padding semantics."""
+    if padded == "czt":
+        return czt_dft(block, pad_len)
+    if padded == "crop" and pad_len > n:
+        block = jnp.pad(block, ((0, 0), (0, pad_len - n)))
+        return fft_rows(block, use_stockham=use_stockham,
+                        backend=backend)[:, :n]
+    return fft_rows(block, use_stockham=use_stockham, backend=backend)
+
+
 def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
                  padded: str | None, pad_len: int, use_stockham: bool,
-                 backend: str | None = None) -> jnp.ndarray:
+                 backend: str | None = None,
+                 pipeline_panels: int = 1) -> jnp.ndarray:
     """One (row FFT -> distributed transpose) phase on a local block.
 
     block: (n_loc, N) — this device's rows.  Returns (n_loc, N): this
     device's block of the *transposed, row-transformed* matrix.
+
+    With ``pipeline_panels=1`` the phase is monolithic: FFT the whole
+    block, then one tiled ``all_to_all`` (split axis 1 into p column
+    panels, keep panel j from every peer, concat along axis 0), then a
+    local transpose.
+
+    With ``pipeline_panels=k > 1`` the block's rows are chunked into ``k``
+    panels and software-pipelined: panel ``i``'s all_to_all is issued
+    *before* panel ``i+1``'s FFT, so the two have no data dependence and
+    the exchange of one panel hides behind the compute of the next (the
+    paper's overlap lever, restated for collectives).  Panel results are
+    re-interleaved so the output is bit-identical in layout to the
+    monolithic phase.
     """
-    if padded == "czt":
-        block = czt_dft(block, pad_len)
-    elif padded == "crop" and pad_len > n:
-        block = jnp.pad(block, ((0, 0), (0, pad_len - n)))
-        block = fft_rows(block, use_stockham=use_stockham,
-                         backend=backend)[:, :n]
-    else:
-        block = fft_rows(block, use_stockham=use_stockham, backend=backend)
-    # Distributed transpose: exchange column panels between devices, then
-    # transpose locally.  tiled all_to_all: split axis 1 into p panels, each
-    # device keeps panel j from every peer, concatenated along axis 0.
-    gathered = jax.lax.all_to_all(block, axis_name, split_axis=1, concat_axis=0,
-                                  tiled=True)  # (N, N/p)
-    return gathered.T  # (N/p, N): a row-block of M^T
+    fft = functools.partial(_local_fft, n=n, padded=padded, pad_len=pad_len,
+                            use_stockham=use_stockham, backend=backend)
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                            split_axis=1, concat_axis=0, tiled=True)
+    n_loc = block.shape[0]
+    k = pipeline_panels
+    if k <= 1 or n_loc % k:
+        return a2a(fft(block)).T  # (N/p, N): a row-block of M^T
+
+    c = n_loc // k  # rows per panel
+    # Software pipeline: FFT panel 0; then alternate (issue all_to_all of
+    # panel i, FFT panel i+1) so each exchange overlaps the next FFT.
+    gathered = []
+    current = fft(block[:c])
+    for i in range(1, k):
+        in_flight = a2a(current)           # exchange panel i-1 ...
+        current = fft(block[i * c:(i + 1) * c])  # ... while transforming i
+        gathered.append(in_flight)
+    gathered.append(a2a(current))
+
+    # Each g_i is (N/k, N/p): peer-major stack of that peer's panel-i rows,
+    # column slice j.  Transposed, its columns are global rows
+    # q*n_loc + i*c + r (q peer-major, r in-panel).  Interleave panels so
+    # output columns are in global row order, matching the monolithic path.
+    p = gathered[0].shape[0] * k // n_loc if n_loc else 1
+    rows_out = gathered[0].shape[1]
+    panels_t = [g.T.reshape(rows_out, p, c) for g in gathered]
+    out = jnp.stack(panels_t, axis=2)      # (rows_out, p, k, c)
+    return out.reshape(rows_out, p * k * c)
 
 
 def pfft2_distributed(
@@ -75,16 +124,24 @@ def pfft2_distributed(
     pad_len: int | None = None,
     use_stockham: bool = False,
     backend: str | None = None,
+    pipeline_panels: int = 1,
 ) -> jnp.ndarray:
     """Distributed 2-D DFT of a square matrix sharded by rows over ``axis_name``.
 
     ``pad_len``: FPM-chosen local FFT length (defaults to the model-free
     smooth size for 'crop', next pow2 >= 2N-1 for 'czt').
+
+    ``pipeline_panels=k`` overlaps each phase's all_to_all with compute by
+    chunking the local rows into k software-pipelined panels (k must
+    divide N/p; k=1 is the monolithic phase).
     """
     n = m.shape[0]
     p = mesh.shape[axis_name]
     if n % p:
         raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    if pipeline_panels > 1 and (n // p) % pipeline_panels:
+        raise ValueError(
+            f"pipeline_panels={pipeline_panels} must divide local rows {n // p}")
     if pad_len is None:
         if padded == "crop":
             pad_len = pad_to_smooth(n)
@@ -103,11 +160,11 @@ def pfft2_distributed(
         # Phase 1: row FFTs + distributed transpose.
         block = _local_phase(block, axis_name, n, padded=padded,
                              pad_len=pad_len, use_stockham=use_stockham,
-                             backend=backend)
+                             backend=backend, pipeline_panels=pipeline_panels)
         # Phase 2: (original-)column FFTs + distributed transpose back.
         block = _local_phase(block, axis_name, n, padded=padded,
                              pad_len=pad_len, use_stockham=use_stockham,
-                             backend=backend)
+                             backend=backend, pipeline_panels=pipeline_panels)
         return block
 
     return _run(m)
@@ -128,7 +185,7 @@ def ragged_row_layout(d: np.ndarray, p: int) -> tuple[int, np.ndarray]:
     remainder is masked padding.  Returns (rows_per_shard, valid_counts).
     The waste max(d)*p - sum(d) is the price of SPMD on *homogeneous* pods —
     on heterogeneous fleets (where d is uneven because speeds genuinely
-    differ) the time saved dominates; see DESIGN.md §2.
+    differ) the time saved dominates; see DESIGN.md §Ragged layouts.
     """
     d = np.asarray(d, dtype=np.int64)
     if len(d) != p:

@@ -1,11 +1,12 @@
 from repro.fft.fft1d import fft1d_stockham, bit_reverse_indices
-from repro.fft.fft2d import fft2d_rowcol
+from repro.fft.fft2d import fft2d_rowcol, fft_rows_then_transpose
 from repro.fft.dft_ref import dft1d_naive, dft2d_naive
 
 __all__ = [
     "fft1d_stockham",
     "bit_reverse_indices",
     "fft2d_rowcol",
+    "fft_rows_then_transpose",
     "dft1d_naive",
     "dft2d_naive",
 ]

@@ -3,6 +3,11 @@
 ``fft2d_rowcol`` is the sequential algorithm the parallel methods decompose:
 row FFTs -> transpose -> row FFTs -> transpose.  It reduces the O(N^4)
 direct 2-D DFT to O(N^2 log N).
+
+``fused=True`` collapses each (row FFT, transpose) pair into one Pallas
+dispatch (``repro.kernels.fused``): the transformed row block is written
+straight to its transposed tile, so the intermediate HBM matrix between
+steps 1-2 and 3-4 never exists.  See DESIGN.md §Fused pipeline.
 """
 
 from __future__ import annotations
@@ -11,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.fft.fft1d import fft1d_stockham
 
-__all__ = ["fft2d_rowcol", "fft_rows"]
+__all__ = ["fft2d_rowcol", "fft_rows", "fft_rows_then_transpose"]
 
 
 def fft_rows(m: jnp.ndarray, *, use_stockham: bool = False,
@@ -33,14 +38,41 @@ def fft_rows(m: jnp.ndarray, *, use_stockham: bool = False,
     return jnp.fft.fft(m, axis=-1)
 
 
-def fft2d_rowcol(m: jnp.ndarray, *, use_stockham: bool = False) -> jnp.ndarray:
+def fft_rows_then_transpose(m: jnp.ndarray, *,
+                            backend: str | None = None) -> jnp.ndarray:
+    """One fused phase: ``FFT_rows(m).T`` without the intermediate matrix.
+
+    Dispatches to the fused Pallas kernel when it applies (2-D input,
+    power-of-two row length, single-precision data — the kernel computes
+    in f32 planes, so wider dtypes keep the full-precision path);
+    otherwise computes the same value as ``fft_rows`` + ``swapaxes`` so
+    callers can use it unconditionally.
+    """
+    n = m.shape[-1]
+    eligible = (m.ndim == 2 and n > 1 and not (n & (n - 1))
+                and jnp.result_type(m, jnp.complex64) == jnp.complex64)
+    if eligible and backend in (None, "pallas", "fused"):
+        from repro.kernels.fused.ops import fft_rows_transpose_op
+        return fft_rows_transpose_op(m)
+    return fft_rows(m, backend=backend).swapaxes(-1, -2)
+
+
+def fft2d_rowcol(m: jnp.ndarray, *, use_stockham: bool = False,
+                 fused: bool = False) -> jnp.ndarray:
     """2-D DFT via row-column decomposition, mirroring the paper's 4 steps:
 
       1. 1-D FFTs on rows
       2. transpose
       3. 1-D FFTs on rows (i.e. the original columns)
       4. transpose
+
+    ``fused=True`` runs steps 1+2 and 3+4 as single fused dispatches
+    (numerically equivalent; no intermediate HBM matrix).
     """
+    if fused:
+        m = fft_rows_then_transpose(m)              # steps 1+2
+        m = fft_rows_then_transpose(m)              # steps 3+4
+        return m
     m = fft_rows(m, use_stockham=use_stockham)      # step 1
     m = m.swapaxes(-1, -2)                          # step 2
     m = fft_rows(m, use_stockham=use_stockham)      # step 3

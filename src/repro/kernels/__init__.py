@@ -3,6 +3,7 @@ blocked transpose), each with a jit'd op wrapper and a pure-jnp oracle.
 Validated with interpret=True on CPU; compiled path targets TPU."""
 
 from repro.kernels.fft.ops import fft_rows_op
+from repro.kernels.fused.ops import fft_rows_transpose_op
 from repro.kernels.transpose.ops import transpose_op
 
-__all__ = ["fft_rows_op", "transpose_op"]
+__all__ = ["fft_rows_op", "fft_rows_transpose_op", "transpose_op"]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched row FFT (Stockham autosort, radix-2).
+"""Pallas TPU kernel: batched row FFT (Stockham autosort, radix-4/radix-2).
 
 TPU adaptation of the paper's 1D_ROW_FFTS_LOCAL hot loop.  Design notes:
 
@@ -8,9 +8,14 @@ TPU adaptation of the paper's 1D_ROW_FFTS_LOCAL hot loop.  Design notes:
   bit-reversal gather: every stage is a reshape + broadcast-multiply +
   stack, all of which stay in VMEM registers/lanes.  A DIT kernel would
   need a lane gather, which is slow on the VPU.
+* Radix 4 halves the pass count — ceil(log2 n / 2) stages instead of
+  log2 n — so every intermediate plane makes half as many trips through
+  the VPU register file; lengths with odd log2 get one radix-2 tail
+  stage.  ``stockham_stage_count`` reports the pass count per radix and
+  is what the microbenchmark records.
 * Grid is over row blocks: each program transforms ``block_rows`` rows of
-  length ``n`` entirely in VMEM.  The log2(n) stage loop is unrolled at
-  trace time.  VMEM budget: 2 planes x block_rows x n x 4B (+ ping-pong),
+  length ``n`` entirely in VMEM.  The stage loop is unrolled at trace
+  time.  VMEM budget: 2 planes x block_rows x n x 4B (+ ping-pong),
   so block_rows is chosen by ``ops.pick_block_rows`` to fit ~8 MiB.
 * Twiddles are computed in-kernel from an iota (cheap transcendental on
   VPU) — no HBM traffic for twiddle tables.
@@ -25,7 +30,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fft_rows_pallas", "stockham_planes"]
+__all__ = [
+    "fft_rows_pallas",
+    "stockham_planes",
+    "stockham_planes_radix4",
+    "stockham_stage_count",
+]
+
+
+def stockham_stage_count(n: int, radix: int = 2) -> int:
+    """Number of Stockham passes over the data for a length-``n`` transform.
+
+    radix 2: log2(n) passes.  radix 4 (with a radix-2 tail when log2(n) is
+    odd): ceil(log2(n) / 2) passes.
+    """
+    if n & (n - 1) or n < 1:
+        raise ValueError(f"length {n} must be a power of two")
+    log2n = int(np.log2(n)) if n > 1 else 0
+    if radix == 2:
+        return log2n
+    if radix == 4:
+        return (log2n + 1) // 2
+    raise ValueError(f"unsupported radix {radix}")
 
 
 def stockham_planes(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False):
@@ -63,8 +89,96 @@ def stockham_planes(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False):
     return re, im
 
 
-def _fft_kernel(re_ref, im_ref, ore_ref, oim_ref, *, inverse: bool):
-    re, im = stockham_planes(re_ref[...], im_ref[...], inverse=inverse)
+def stockham_planes_radix4(re: jnp.ndarray, im: jnp.ndarray, *,
+                           inverse: bool = False):
+    """Mixed radix-4/radix-2 Stockham FFT over the last axis of planes.
+
+    Same contract as ``stockham_planes`` but each radix-4 pass combines two
+    radix-2 levels, so the data makes ceil(log2 n / 2) trips instead of
+    log2 n.  When log2(n) is odd the final pass (ncur == 2) is radix-2.
+
+    Derivation: with the stage view (..., ncur, s) and m = ncur // r, part
+    t is v[..., t*m:(t+1)*m, :]; output slot u of butterfly j is
+    ``w_j^u * sum_t part_t * omega_r^{u t}`` with w_j = exp(sign*2*pi*i*
+    j/(r*m)) — for r=2 this reduces exactly to ``stockham_planes``'s
+    update, for r=4 omega_4 = -+i so the inner DFT-4 is adds/swaps only.
+    """
+    n = re.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"length {n} must be a power of two")
+    batch = re.shape[:-1]
+    sign = 1.0 if inverse else -1.0
+    ncur, s = n, 1
+    while ncur > 1:
+        if ncur % 4:  # ncur == 2: one radix-2 tail stage
+            m = ncur // 2
+            vre = re.reshape(batch + (ncur, s))
+            vim = im.reshape(batch + (ncur, s))
+            are, aim = vre[..., :m, :], vim[..., :m, :]
+            bre, bim = vre[..., m:, :], vim[..., m:, :]
+            ang = sign * np.pi / m * jnp.arange(m, dtype=re.dtype)
+            wre = jnp.cos(ang)[:, None]
+            wim = jnp.sin(ang)[:, None]
+            dre, dim = are - bre, aim - bim
+            re = jnp.stack([are + bre, dre * wre - dim * wim],
+                           axis=-2).reshape(batch + (n,))
+            im = jnp.stack([aim + bim, dre * wim + dim * wre],
+                           axis=-2).reshape(batch + (n,))
+            ncur, s = m, 2 * s
+            continue
+        m = ncur // 4
+        vre = re.reshape(batch + (ncur, s))
+        vim = im.reshape(batch + (ncur, s))
+        p0re, p0im = vre[..., 0 * m:1 * m, :], vim[..., 0 * m:1 * m, :]
+        p1re, p1im = vre[..., 1 * m:2 * m, :], vim[..., 1 * m:2 * m, :]
+        p2re, p2im = vre[..., 2 * m:3 * m, :], vim[..., 2 * m:3 * m, :]
+        p3re, p3im = vre[..., 3 * m:4 * m, :], vim[..., 3 * m:4 * m, :]
+        # DFT-4 across parts: even/odd sums, omega_4 = sign * i.
+        e0re, e0im = p0re + p2re, p0im + p2im   # x0 + x2
+        e1re, e1im = p0re - p2re, p0im - p2im   # x0 - x2
+        o0re, o0im = p1re + p3re, p1im + p3im   # x1 + x3
+        # sign*i * (x1 - x3): multiply by i flips planes.
+        d3re, d3im = p1re - p3re, p1im - p3im
+        o1re, o1im = -sign * d3im, sign * d3re
+        s0re, s0im = e0re + o0re, e0im + o0im   # S0 = x0 + x1 + x2 + x3
+        s1re, s1im = e1re + o1re, e1im + o1im   # S1 = x0 + w x1 - x2 + w^3 x3
+        s2re, s2im = e0re - o0re, e0im - o0im   # S2 = x0 - x1 + x2 - x3
+        s3re, s3im = e1re - o1re, e1im - o1im   # S3
+        ang = sign * 2.0 * np.pi / (4 * m) * jnp.arange(m, dtype=re.dtype)
+        w1re, w1im = jnp.cos(ang)[:, None], jnp.sin(ang)[:, None]
+        w2re = w1re * w1re - w1im * w1im
+        w2im = 2.0 * w1re * w1im
+        w3re = w2re * w1re - w2im * w1im
+        w3im = w2re * w1im + w2im * w1re
+        u1re = s1re * w1re - s1im * w1im
+        u1im = s1re * w1im + s1im * w1re
+        u2re = s2re * w2re - s2im * w2im
+        u2im = s2re * w2im + s2im * w2re
+        u3re = s3re * w3re - s3im * w3im
+        u3im = s3re * w3im + s3im * w3re
+        re = jnp.stack([s0re, u1re, u2re, u3re], axis=-2).reshape(batch + (n,))
+        im = jnp.stack([s0im, u1im, u2im, u3im], axis=-2).reshape(batch + (n,))
+        ncur, s = m, 4 * s
+    if inverse:
+        re = re / n
+        im = im / n
+    return re, im
+
+
+def apply_stockham(re: jnp.ndarray, im: jnp.ndarray, *, radix: int = 2,
+                   inverse: bool = False):
+    """Dispatch to the radix-2 or mixed radix-4 stage loop."""
+    if radix == 4:
+        return stockham_planes_radix4(re, im, inverse=inverse)
+    if radix == 2:
+        return stockham_planes(re, im, inverse=inverse)
+    raise ValueError(f"unsupported radix {radix}")
+
+
+def _fft_kernel(re_ref, im_ref, ore_ref, oim_ref, *, inverse: bool,
+                radix: int):
+    re, im = apply_stockham(re_ref[...], im_ref[...], radix=radix,
+                            inverse=inverse)
     ore_ref[...] = re
     oim_ref[...] = im
 
@@ -75,11 +189,13 @@ def fft_rows_pallas(
     *,
     block_rows: int = 8,
     inverse: bool = False,
+    radix: int = 2,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """pallas_call wrapper: (rows, n) planes -> transformed planes.
 
     rows must be a multiple of block_rows (ops.py pads); n a power of two.
+    ``radix=4`` runs the mixed radix-4/2 stage loop (half the passes).
     """
     rows, n = re.shape
     if rows % block_rows:
@@ -91,7 +207,7 @@ def fft_rows_pallas(
         jax.ShapeDtypeStruct((rows, n), im.dtype),
     ]
     fn = pl.pallas_call(
-        functools.partial(_fft_kernel, inverse=inverse),
+        functools.partial(_fft_kernel, inverse=inverse, radix=radix),
         grid=grid,
         in_specs=[spec, spec],
         out_specs=[spec, spec],

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.fft.kernel import fft_rows_pallas
 
-__all__ = ["fft_rows_op", "pick_block_rows"]
+__all__ = ["fft_rows_op", "pick_block_rows", "pick_radix",
+           "resolve_call_params", "rows_to_padded_planes"]
 
 _VMEM_BUDGET = 8 * 1024 * 1024  # ~half of a v5e core's 16 MiB VMEM
 
@@ -26,36 +27,66 @@ def pick_block_rows(n: int, dtype_bytes: int = 4) -> int:
     return int(max(1, min(b, 256)))
 
 
+def pick_radix(n: int) -> int:
+    """Radix for a power-of-two length: 4 whenever a radix-4 pass exists
+    (n >= 4) — half the Stockham passes — else 2."""
+    return 4 if n >= 4 else 2
+
+
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(jax.jit, static_argnames=("inverse", "block_rows", "interpret"))
+def resolve_call_params(n: int, block_rows: int | None, radix: int | None,
+                        interpret: bool | None) -> tuple[int, int, bool]:
+    """Shared prologue for the row-FFT op wrappers (plain and fused):
+    validate the length and fill in block_rows/radix/interpret defaults."""
+    if n & (n - 1):
+        raise ValueError(f"pallas fft kernel requires power-of-two length, got {n}")
+    if interpret is None:
+        interpret = _on_cpu()
+    if radix is None:
+        radix = pick_radix(n)
+    if block_rows is None:
+        block_rows = pick_block_rows(n)
+    return block_rows, radix, interpret
+
+
+def rows_to_padded_planes(x2: jnp.ndarray, block_rows: int
+                          ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """(rows, n) complex -> f32 (re, im) planes row-padded to the block
+    multiple, plus the original row count for cropping the result."""
+    total = x2.shape[0]
+    padded = (total + block_rows - 1) // block_rows * block_rows
+    if padded != total:
+        x2 = jnp.pad(x2, ((0, padded - total), (0, 0)))
+    return (jnp.real(x2).astype(jnp.float32),
+            jnp.imag(x2).astype(jnp.float32), total)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("inverse", "block_rows", "radix",
+                                    "interpret"))
 def fft_rows_op(
     x: jnp.ndarray,
     *,
     inverse: bool = False,
     block_rows: int | None = None,
+    radix: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Complex row FFT via the Pallas kernel. x: (..., rows, n) complex."""
-    if interpret is None:
-        interpret = _on_cpu()
+    """Complex row FFT via the Pallas kernel. x: (..., rows, n) complex.
+
+    ``radix=None`` auto-selects (radix 4 with radix-2 tail for n >= 4).
+    """
     n = x.shape[-1]
-    if n & (n - 1):
-        raise ValueError(f"pallas fft kernel requires power-of-two length, got {n}")
-    if block_rows is None:
-        block_rows = pick_block_rows(n)
+    block_rows, radix, interpret = resolve_call_params(n, block_rows, radix,
+                                                       interpret)
     lead = x.shape[:-2]
     rows = x.shape[-2]
     x2 = x.reshape((-1, n)) if lead else x.reshape((rows, n))
-    total = x2.shape[0]
-    padded = (total + block_rows - 1) // block_rows * block_rows
-    if padded != total:
-        x2 = jnp.pad(x2, ((0, padded - total), (0, 0)))
-    re = jnp.real(x2).astype(jnp.float32)
-    im = jnp.imag(x2).astype(jnp.float32)
+    re, im, total = rows_to_padded_planes(x2, block_rows)
     ore, oim = fft_rows_pallas(re, im, block_rows=block_rows, inverse=inverse,
-                               interpret=interpret)
+                               radix=radix, interpret=interpret)
     out = (ore[:total] + 1j * oim[:total]).astype(jnp.result_type(x, jnp.complex64))
     return out.reshape(lead + (rows, n)) if lead else out.reshape((rows, n))

@@ -1,0 +1,4 @@
+from repro.kernels.fused.kernel import fft_rows_transpose_pallas
+from repro.kernels.fused.ops import fft_rows_transpose_op
+
+__all__ = ["fft_rows_transpose_pallas", "fft_rows_transpose_op"]

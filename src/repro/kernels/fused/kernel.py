@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused row FFT -> transposed write.
+
+The unfused pipeline (steps 1-2 / 3-4 of ``fft2d_rowcol``) materialises the
+row-transformed matrix in HBM, then a second kernel streams it back through
+VMEM to transpose it.  This kernel fuses the two: each grid program loads a
+``block_rows x n`` row block, runs the full Stockham stage loop in VMEM,
+transposes the block *in registers*, and writes it directly to its
+transposed tile position ``(0, i)`` of the ``(n, rows)`` output.  The
+intermediate HBM matrix — 2 planes x rows x n x 4B of write + read traffic
+per phase — disappears entirely; the transform pass IS the transpose pass
+(the EFFT / Korotkevich fused-transform structure, arXiv:1409.5757 /
+arXiv:2008.07031).
+
+Output block height is the full transform length ``n``, so VMEM holds
+2 planes x block_rows x n (input) + 2 x n x block_rows (output) — the same
+footprint as the unfused FFT kernel's ping-pong, and ``ops.pick_block_rows``
+already budgets for it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fft.kernel import apply_stockham
+
+__all__ = ["fft_rows_transpose_pallas"]
+
+
+def _fused_kernel(re_ref, im_ref, ore_ref, oim_ref, *, inverse: bool,
+                  radix: int):
+    re, im = apply_stockham(re_ref[...], im_ref[...], radix=radix,
+                            inverse=inverse)
+    ore_ref[...] = re.T
+    oim_ref[...] = im.T
+
+
+def fft_rows_transpose_pallas(
+    re: jnp.ndarray,
+    im: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+    inverse: bool = False,
+    radix: int = 2,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(rows, n) planes -> FFT along rows, written transposed as (n, rows).
+
+    rows must be a multiple of block_rows (ops.py pads); n a power of two.
+    """
+    rows, n = re.shape
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={block_rows}")
+    grid = (rows // block_rows,)
+    in_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((n, block_rows), lambda i: (0, i))
+    out_shape = [
+        jax.ShapeDtypeStruct((n, rows), re.dtype),
+        jax.ShapeDtypeStruct((n, rows), im.dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_fused_kernel, inverse=inverse, radix=radix),
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im)

@@ -8,9 +8,19 @@ smoke tests must see 1 device while the dry-run sees 512).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.37; Auto is the pre-AxisType default.
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,12 +29,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     only gradient all-reduces cross the (slow) pod interconnect."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist —
     used by tests and the quickstart example."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

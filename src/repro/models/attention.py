@@ -99,10 +99,15 @@ def gqa_apply(p, x, *, n_heads: int, n_kv: int, hd: int, rope_mode: str,
         o = _sdpa(q, k, v, pos, None, causal=causal, q_chunk=q_chunk)
         new_cache = None
     else:
+        # dynamic_update_slice needs all start indices in one dtype; under
+        # JAX_ENABLE_X64 literal 0s canonicalize to int64 while a traced
+        # pos0 stays int32 — cast everything to pos0's dtype.
+        p0 = jnp.asarray(pos0)
+        z = jnp.zeros((), p0.dtype)
         ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, pos0, 0, 0))
+                                          (z, p0, z, z))
         cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, pos0, 0, 0))
+                                          (z, p0, z, z))
         new_cache = {"k": ck, "v": cv}
         o = _sdpa(q, ck, cv, pos, pos0 + T, causal=True, q_chunk=q_chunk)
     return dense(p["wo"], o.reshape(B, T, n_heads * hd)), new_cache
@@ -151,10 +156,12 @@ def mla_apply(p, x, *, n_heads: int, kv_lora: int, nope: int, rope: int,
                        rope_theta)[:, :, 0, :]
 
     if cache is not None:
+        p0 = jnp.asarray(pos0)
+        z = jnp.zeros((), p0.dtype)
         ckv_all = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos0, 0))
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (z, p0, z))
         krope_all = jax.lax.dynamic_update_slice(
-            cache["krope"], krope.astype(cache["krope"].dtype), (0, pos0, 0))
+            cache["krope"], krope.astype(cache["krope"].dtype), (z, p0, z))
         new_cache = {"ckv": ckv_all, "krope": krope_all}
         kv_len = pos0 + T
     else:

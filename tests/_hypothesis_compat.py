@@ -1,0 +1,61 @@
+"""Hypothesis shim: re-export the real library when installed, otherwise a
+deterministic fallback so property tests still run (as seeded example sweeps)
+on minimal environments.
+
+The fallback implements exactly the strategy surface this suite uses
+(``st.integers``, ``st.sampled_from``) and runs each property
+``max_examples`` times with draws from a fixed-seed generator.  It is not a
+replacement for hypothesis (no shrinking, no database) — install
+``requirements-dev.txt`` for the real thing.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[rng.integers(len(elems))])
+
+    st = _Strategies()
+
+    def settings(max_examples=100, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_max_examples", 100)
+
+            def runner():
+                rng = _np.random.default_rng(0)
+                for _ in range(max_examples):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

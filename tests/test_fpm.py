@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.fpm import (FPMSet, SpeedFunction, build_fpm, fft_flops,
                             load_fpms, save_fpms)

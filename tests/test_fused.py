@@ -1,0 +1,160 @@
+"""Fused FFT->transpose path, radix-4 stages, and batched segment dispatch:
+equivalence against the unfused/radix-2/looped references."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.pfft import (plan_segment_batches, pfft_lb,
+                             segment_row_ffts)
+from repro.fft.fft2d import fft2d_rowcol, fft_rows_then_transpose
+from repro.kernels.fft.kernel import (stockham_planes, stockham_planes_radix4,
+                                      stockham_stage_count)
+from repro.kernels.fft.ops import fft_rows_op, pick_radix
+from repro.kernels.fused.kernel import fft_rows_transpose_pallas
+from repro.kernels.fused.ops import fft_rows_transpose_op
+
+
+def csignal(rng, rows, n, dtype=np.complex64):
+    return jnp.asarray((rng.standard_normal((rows, n))
+                        + 1j * rng.standard_normal((rows, n))).astype(dtype))
+
+
+# ------------------------------------------------------------- radix-4 stages
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 64, 128, 1024])
+def test_radix4_matches_radix2(rng, n):
+    re = jnp.asarray(rng.standard_normal((3, n)).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal((3, n)).astype(np.float32))
+    r2 = stockham_planes(re, im)
+    r4 = stockham_planes_radix4(re, im)
+    tol = 1e-3 * n ** 0.5
+    np.testing.assert_allclose(np.asarray(r4[0]), np.asarray(r2[0]), atol=tol)
+    np.testing.assert_allclose(np.asarray(r4[1]), np.asarray(r2[1]), atol=tol)
+
+
+@pytest.mark.parametrize("inverse", [False, True])
+def test_radix4_inverse_roundtrip(rng, inverse):
+    n = 32
+    re = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+    fr, fi = stockham_planes_radix4(re, im, inverse=inverse)
+    br, bi = stockham_planes_radix4(fr, fi, inverse=not inverse)
+    np.testing.assert_allclose(np.asarray(br), np.asarray(re), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(bi), np.asarray(im), atol=1e-4)
+
+
+def test_stage_counts():
+    for log2n in range(1, 12):
+        n = 1 << log2n
+        assert stockham_stage_count(n, 2) == log2n
+        assert stockham_stage_count(n, 4) == (log2n + 1) // 2
+    with pytest.raises(ValueError):
+        stockham_stage_count(12)
+    with pytest.raises(ValueError):
+        stockham_stage_count(16, radix=8)
+
+
+def test_pick_radix():
+    assert pick_radix(2) == 2
+    assert pick_radix(4) == 4
+    assert pick_radix(1024) == 4
+
+
+@pytest.mark.parametrize("n", [16, 128])
+def test_fft_op_radix4_vs_oracle(rng, n):
+    x = csignal(rng, 5, n)
+    out = fft_rows_op(x, radix=4, block_rows=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.fft.fft(x, axis=-1)), atol=2e-3)
+
+
+# ------------------------------------------------------------- fused kernel
+
+@pytest.mark.parametrize("radix", [2, 4])
+@pytest.mark.parametrize("block_rows", [1, 4])
+def test_fused_kernel_pallas_call(rng, radix, block_rows):
+    rows, n = 8, 64
+    re = jnp.asarray(rng.standard_normal((rows, n)).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal((rows, n)).astype(np.float32))
+    ore, oim = fft_rows_transpose_pallas(re, im, block_rows=block_rows,
+                                         radix=radix, interpret=True)
+    ref = np.fft.fft(np.asarray(re) + 1j * np.asarray(im), axis=-1).T
+    np.testing.assert_allclose(np.asarray(ore), ref.real, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(oim), ref.imag, atol=2e-3)
+
+
+@pytest.mark.parametrize("rows,n", [(8, 64), (13, 32), (64, 256)])
+def test_fused_op_vs_unfused(rng, rows, n):
+    x = csignal(rng, rows, n)
+    out = fft_rows_transpose_op(x, interpret=True)
+    assert out.shape == (n, rows)
+    ref = jnp.fft.fft(x, axis=-1).T
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-3)
+
+
+def test_fused_op_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        fft_rows_transpose_op(jnp.ones((4, 12), jnp.complex64), interpret=True)
+    with pytest.raises(ValueError):
+        fft_rows_transpose_op(jnp.ones((2, 4, 8), jnp.complex64),
+                              interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+@pytest.mark.parametrize("n", [16, 32, 64, 128])
+def test_fft2d_fused_vs_unfused_equivalence(rng, dtype, n):
+    """The tentpole equivalence: fused=True computes the same 2-D DFT."""
+    m = csignal(rng, n, n, dtype=dtype)
+    fused = fft2d_rowcol(m, fused=True)
+    unfused = fft2d_rowcol(m)
+    # complex128 (when x64 is enabled) must take the full-precision
+    # fallback, not the f32-plane kernel; judge by the realised dtype.
+    tol = 1e-8 if m.dtype == jnp.complex128 else 1e-2 * n ** 0.5
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(jnp.fft.fft2(m)),
+                               atol=tol)
+
+
+def test_fused_phase_fallbacks(rng):
+    # non-pow2 length and batched input take the unfused fallback path
+    x = csignal(rng, 6, 12)
+    np.testing.assert_allclose(
+        np.asarray(fft_rows_then_transpose(x)),
+        np.asarray(jnp.fft.fft(x, axis=-1).T), atol=1e-4)
+    xb = jnp.stack([csignal(rng, 4, 8), csignal(rng, 4, 8)])
+    np.testing.assert_allclose(
+        np.asarray(fft_rows_then_transpose(xb)),
+        np.asarray(jnp.fft.fft(xb, axis=-1).swapaxes(-1, -2)), atol=1e-4)
+
+
+def test_pfft_lb_fused_matches(rng):
+    m = csignal(rng, 64, 64)
+    np.testing.assert_allclose(np.asarray(pfft_lb(m, 3, fused=True)),
+                               np.asarray(jnp.fft.fft2(m)), atol=2e-2)
+
+
+# ------------------------------------------------- batched segment dispatch
+
+def test_segment_batching_plan(rng):
+    n = 32
+    d = np.array([10, 7, 0, 15])
+    pads = np.array([40, 32, 48, 40])
+    plan = plan_segment_batches(d, pads, n)
+    # one dispatch per *distinct* pad length among non-empty segments
+    assert sorted(plan.keys()) == [32, 40]
+    covered = np.sort(np.concatenate(list(plan.values())))
+    np.testing.assert_array_equal(covered, np.arange(n))
+
+
+@pytest.mark.parametrize("pads", [None, [40, 32, 40]])
+def test_segment_batched_equals_looped(rng, pads):
+    n = 32
+    m = csignal(rng, n, n)
+    d = np.array([10, 7, 15])
+    pads = np.array(pads) if pads is not None else None
+    batched = segment_row_ffts(m, d, pad_lengths=pads, batched=True)
+    looped = segment_row_ffts(m, d, pad_lengths=pads, batched=False)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(looped),
+                               atol=1e-4)

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.kernels.fft.kernel import fft_rows_pallas, stockham_planes
 from repro.kernels.fft.ops import fft_rows_op, pick_block_rows

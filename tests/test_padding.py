@@ -1,7 +1,7 @@
 """Padding-selection (Determine_Pad_Length) properties."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.fpm import SpeedFunction
 from repro.core.padding import (determine_pad_length, is_smooth,

@@ -4,7 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.fpm import FPMSet, SpeedFunction
 from repro.core.partition import hpopta, lb_partition, popta, partition_rows

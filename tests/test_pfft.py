@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core import (FPMSet, SpeedFunction, czt_dft, pfft_fpm,
                         pfft_fpm_czt, pfft_fpm_pad, pfft_lb, plan_pfft)
@@ -109,6 +109,37 @@ def test_czt_dft_property_any_length(n, seed):
 def test_czt_rejects_short_fft():
     with pytest.raises(ValueError):
         czt_dft(jnp.ones((1, 16), jnp.complex64), m_fft=16)
+
+
+@pytest.mark.parametrize("n", [7, 13, 31])
+def test_czt_odd_lengths(n):
+    """Odd N exercises the chirp's (j^2 mod 2N) exactness trick."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray((rng.standard_normal((3, n))
+                     + 1j * rng.standard_normal((3, n))).astype(np.complex64))
+    np.testing.assert_allclose(np.asarray(czt_dft(x)),
+                               np.asarray(jnp.fft.fft(x, axis=-1)), atol=5e-3)
+
+
+@pytest.mark.parametrize("m_fft", [31, 33, 40, 64])
+def test_czt_explicit_m_fft(m_fft):
+    """Any m_fft >= 2N-1 is valid, including non-power-of-two lengths."""
+    n = 16  # 2N-1 = 31
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((2, n))
+                     + 1j * rng.standard_normal((2, n))).astype(np.complex64))
+    np.testing.assert_allclose(np.asarray(czt_dft(x, m_fft=m_fft)),
+                               np.asarray(jnp.fft.fft(x, axis=-1)), atol=5e-3)
+
+
+def test_czt_m_fft_boundary_error():
+    """m_fft = 2N-2 is rejected; 2N-1 (exact boundary) is accepted."""
+    n = 16
+    x = jnp.ones((1, n), jnp.complex64)
+    with pytest.raises(ValueError):
+        czt_dft(x, m_fft=2 * n - 2)
+    np.testing.assert_allclose(np.asarray(czt_dft(x, m_fft=2 * n - 1)),
+                               np.asarray(jnp.fft.fft(x, axis=-1)), atol=5e-3)
 
 
 def test_plan_api_all_methods():

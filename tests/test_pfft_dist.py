@@ -52,6 +52,21 @@ assert float(jnp.max(jnp.abs(out - ref2))) < 1e-2, "crop semantics"
 
 rows, counts = ragged_row_layout(np.array([10, 6, 8, 8, 8, 8, 8, 8]), 8)
 assert rows == 10 and counts.sum() == 64
+
+# software-pipelined panels: identical result to the monolithic phase
+for k in (2, 4, 8):
+    out = pfft2_distributed(m, mesh, "fft", pipeline_panels=k)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "panels %d" % k
+out = pfft2_distributed(m, mesh, "fft", padded="czt", pipeline_panels=4)
+assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "czt panels"
+out = pfft2_distributed(m, mesh, "fft", padded="crop", pad_len=pad,
+                        pipeline_panels=2)
+assert float(jnp.max(jnp.abs(out - ref2))) < 1e-2, "crop panels"
+try:
+    pfft2_distributed(m, mesh, "fft", pipeline_panels=3)
+    raise SystemExit("expected ValueError for non-dividing panel count")
+except ValueError:
+    pass
 print("DIST_OK")
 """
 
@@ -70,6 +85,18 @@ def test_distributed_pfft_single_device_mesh():
     m = jnp.asarray((rng.standard_normal((32, 32))
                      + 1j * rng.standard_normal((32, 32))).astype(np.complex64))
     out = pfft2_distributed(m, mesh, "fft")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.fft.fft2(m)),
+                               atol=1e-2)
+
+
+def test_pipelined_single_device_mesh():
+    """pipeline_panels on the degenerate 1-device mesh (pure reshuffle)."""
+    mesh = jax.make_mesh((1,), ("fft",))
+    from repro.core.pfft_dist import pfft2_distributed
+    rng = np.random.default_rng(1)
+    m = jnp.asarray((rng.standard_normal((32, 32))
+                     + 1j * rng.standard_normal((32, 32))).astype(np.complex64))
+    out = pfft2_distributed(m, mesh, "fft", pipeline_panels=4)
     np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.fft.fft2(m)),
                                atol=1e-2)
 
