@@ -1,8 +1,9 @@
-"""Kernel-layer microbenchmarks -> BENCH_kernels.json.
+"""Kernel-layer microbenchmarks -> BENCH_kernels.json (and wisdom).
 
-    PYTHONPATH=src python -m benchmarks.kernel_microbench [--quick] [--out F]
+    PYTHONPATH=src python -m benchmarks.kernel_microbench \\
+        [--quick] [--out F] [--wisdom W]
 
-Three comparisons, one JSON record each (plus structural facts the
+Four comparisons, one JSON record each (plus structural facts the
 acceptance checks assert on):
 
   radix        radix-2 vs radix-4 Stockham (same op, half the passes);
@@ -12,6 +13,15 @@ acceptance checks assert on):
   segments     looped per-segment ``segment_row_ffts`` vs the batched
                one-dispatch-per-distinct-pad-length path; records the
                dispatch counts from ``plan_segment_batches``.
+  planner      the full ``PlanConfig`` sweep (every variant the tuner can
+               pick) vs the estimate-planned config — records whether the
+               cost model's pick lands within the measured envelope
+               (``within_best_pct`` / ``not_worst``).
+
+``--wisdom W`` writes each benched size's best *measured* config into the
+wisdom store ``W`` (keyed exactly as ``plan_pfft`` keys its lookups), so a
+measured benchmark run warms every later planning session — FFTW's
+wisdom lifecycle; CI asserts the round trip.
 
 On this CPU container the Pallas kernels run in interpret mode, so the
 absolute times are not TPU times — the JSON exists to start the perf
@@ -36,6 +46,8 @@ from repro.kernels.fft.kernel import stockham_stage_count
 from repro.kernels.fft.ops import fft_rows_op
 from repro.kernels.fused.ops import fft_rows_transpose_op
 from repro.kernels.transpose.ops import transpose_op
+from repro.plan import (PlanConfig, candidate_configs, measure_configs,
+                        record_wisdom, tune_config, wisdom_key)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
@@ -91,8 +103,9 @@ def bench_segments(n: int, p: int, pad_to: int) -> list[dict]:
     plan = plan_segment_batches(d, pads, n)
     recs = []
     for name, batched in (("looped", False), ("batched", True)):
-        t = time_fn(lambda m=m, b=batched: segment_row_ffts(
-            m, d, pad_lengths=pads, batched=b))
+        cfg = PlanConfig(batched=batched, pad="fpm")
+        t = time_fn(lambda m=m, c=cfg: segment_row_ffts(
+            m, d, pad_lengths=pads, config=c))
         recs.append({
             "bench": "segments",
             "n": int(n),
@@ -105,13 +118,56 @@ def bench_segments(n: int, p: int, pad_to: int) -> list[dict]:
     return recs
 
 
-def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
+def bench_planner(sizes, p: int, wisdom_path: str | None = None) -> list[dict]:
+    """Time the full PlanConfig sweep, compare the estimate-planned pick
+    against the measured envelope, and (optionally) warm the wisdom store
+    with each size's best measured config."""
+    import jax
+    backend = jax.default_backend()
+    recs = []
+    for n in sizes:
+        d = lb_partition(n, p).d
+        # measure_configs is the tuner's own interleaved-min harness (a
+        # per-config timing block would rank this host's jitter instead);
+        # 40 rounds so per-config mins converge below the few-percent gap
+        # the acceptance comparison cares about.
+        times = measure_configs(candidate_configs(n, d=d), n, d=d, rounds=40)
+        for cfg, t in times.items():
+            recs.append({"bench": "planner", "n": int(n), "p": int(p),
+                         "role": "sweep", "config": cfg.describe(),
+                         "time_s": t})
+        est_cfg, _ = tune_config(n, d=d, mode="estimate")
+        t_est = times[est_cfg]
+        best_cfg = min(times, key=times.get)
+        t_best, t_worst = times[best_cfg], max(times.values())
+        recs.append({
+            "bench": "planner", "n": int(n), "p": int(p),
+            "role": "estimate-planned", "config": est_cfg.describe(),
+            "time_s": t_est,
+            "best_config": best_cfg.describe(), "best_s": t_best,
+            "worst_s": t_worst,
+            "within_best_pct": 100.0 * (t_est / t_best - 1.0),
+            "not_worst": bool(t_est <= t_worst),
+        })
+        if wisdom_path:
+            key = wisdom_key(n=n, dtype="complex64", p=p, method="lb",
+                             backend=backend)
+            record_wisdom(wisdom_path, key, best_cfg, mode="measure",
+                          time_s=t_best,
+                          extra={"origin": "kernel_microbench"})
+    return recs
+
+
+def run(quick: bool = False, out: str = DEFAULT_OUT,
+        wisdom: str | None = None) -> dict:
     radix_sizes = [64, 256] if quick else [64, 256, 1024]
     fused_sizes = [64, 128] if quick else [64, 128, 256]
+    planner_sizes = [128] if quick else [128, 256]
     records = (bench_radix(radix_sizes, rows=32 if quick else 64)
                + bench_fused(fused_sizes)
                + bench_segments(n=128 if quick else 256, p=4,
-                                pad_to=160 if quick else 320))
+                                pad_to=160 if quick else 320)
+               + bench_planner(planner_sizes, p=4, wisdom_path=wisdom))
     import jax
     payload = {
         "backend": jax.default_backend(),
@@ -123,6 +179,8 @@ def run(quick: bool = False, out: str = DEFAULT_OUT) -> dict:
     for r in records:
         print(",".join(f"{k}={v}" for k, v in r.items()))
     print(f"wrote {out} ({len(records)} records)")
+    if wisdom:
+        print(f"warmed wisdom store {wisdom}")
     return payload
 
 
@@ -130,8 +188,11 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--wisdom", default=None,
+                    help="wisdom store to warm with each size's best "
+                         "measured config (plan_pfft-compatible keys)")
     args = ap.parse_args()
-    run(quick=args.quick, out=args.out)
+    run(quick=args.quick, out=args.out, wisdom=args.wisdom)
     return 0
 
 

@@ -1,6 +1,11 @@
 """Distributed 2-D FFT pipeline on a device mesh — the paper's algorithm
 with the transpose steps realised as all_to_all collectives (TPU-pod form).
 
+Every variant is named by a ``PlanConfig`` (the planner's currency): the
+explicit configs below show the space, and the last run lets the
+estimate-mode tuner price pipeline_panels candidates (comm volume
+included) and pick one — the same selection point ``plan_pfft`` uses.
+
 Runs on CPU with 8 placeholder devices; the same code drives a v5e pod.
 
 Run:  PYTHONPATH=src python examples/fft2d_pipeline.py
@@ -15,23 +20,34 @@ import jax.numpy as jnp
 
 from repro.core.pfft_dist import make_pfft2_fn
 from repro.launch.mesh import make_local_mesh
+from repro.plan import PlanConfig, tune_config
 
 N = 256
-mesh = jax.make_mesh((8,), ("fft",))
+P = 8
+mesh = jax.make_mesh((P,), ("fft",))
 
 rng = np.random.default_rng(0)
 sig = (rng.standard_normal((N, N)) + 1j * rng.standard_normal((N, N))
        ).astype(np.complex64)
 sig = jnp.asarray(sig)
 
-for kw, label in [({}, "plain"),
-                  ({"padded": "czt"}, "czt-padded (exact)"),
-                  ({"use_stockham": True}, "stockham local FFT"),
-                  ({"pipeline_panels": 4}, "4-panel overlap pipeline")]:
-    fn = make_pfft2_fn(mesh, N, "fft", **kw)
+# Each phase exchanges the whole matrix minus the diagonal block.
+comm_bytes = N * N * 8 * (P - 1) / P
+planned, info = tune_config(N, mode="estimate", panels=(1, 2, 4),
+                            comm_bytes=comm_bytes)
+
+configs = [
+    (PlanConfig(), "plain"),
+    (PlanConfig(pad="czt"), "czt-padded (exact)"),
+    (PlanConfig(radix=2), "stockham local FFT"),
+    (PlanConfig(pipeline_panels=4), "4-panel overlap pipeline"),
+    (planned, f"estimate-planned [{planned.describe()}]"),
+]
+for cfg, label in configs:
+    fn = make_pfft2_fn(mesh, N, "fft", config=cfg)
     out = fn(sig)
     err = float(jnp.max(jnp.abs(out - jnp.fft.fft2(sig))))
-    print(f"distributed pfft2 [{label:24s}] max_err={err:.2e} "
+    print(f"distributed pfft2 [{label:40s}] max_err={err:.2e} "
           f"shards={len(out.sharding.device_set)}")
 print("collective transpose pattern:",
       "row FFT -> all_to_all -> col FFT -> all_to_all")

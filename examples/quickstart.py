@@ -4,7 +4,9 @@
    timing row-FFT batches at a grid of problem sizes.
 2. PARTITION the rows (POPTA/HPOPTA choose automatically per the epsilon
    tolerance test).
-3. Execute PFFT-FPM / PFFT-FPM-PAD and compare against the basic 2-D FFT.
+3. Plan with the model-driven tuner (``tune="estimate"`` prices every
+   execution variant from the FPMs and picks one — no boolean kwargs) and
+   execute PFFT-FPM / PFFT-FPM-PAD against the basic 2-D FFT.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -41,12 +43,18 @@ signal = jnp.asarray(signal)
 
 oracle = jnp.fft.fft2(signal)
 for method in ("lb", "fpm", "fpm-czt"):
-    plan = plan_pfft(N, p=P, fpms=fpms, method=method)
+    plan = plan_pfft(N, p=P, fpms=fpms, method=method, tune="estimate")
     out = plan.execute(signal)
     err = float(jnp.max(jnp.abs(out - oracle)))
-    print(f"method={method:8s} d={plan.d} max_err={err:.2e}")
+    print(f"method={method:8s} d={plan.d} config=[{plan.config.describe()}] "
+          f"(chosen: {plan.tuning['source']}) max_err={err:.2e}")
 
-plan = plan_pfft(N, fpms=fpms, method="fpm-pad")
+plan = plan_pfft(N, fpms=fpms, method="fpm-pad", tune="estimate")
 out = plan.execute(signal)
 print(f"method=fpm-pad  d={plan.d} pad_lengths={plan.pad_lengths} "
+      f"config=[{plan.config.describe()}] "
       f"(padded-signal DFT semantics; see DESIGN.md)")
+
+# Batched execute: the plan vmaps over leading batch dims.
+batch = jnp.stack([signal, signal[::-1]])
+print("batched execute:", plan.execute(batch).shape)

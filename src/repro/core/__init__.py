@@ -8,6 +8,7 @@ from repro.core.pfft import (pfft_lb, pfft_fpm, pfft_fpm_pad, pfft_fpm_czt,
                              czt_dft, segment_row_ffts, plan_segment_batches)
 from repro.core.api import plan_pfft, PfftPlan
 from repro.core.pfft3d import pfft3_lb, pfft3_fpm, pfft3_fpm_pad, pfft3_distributed
+from repro.plan.config import PlanConfig
 
 __all__ = [
     "SpeedFunction", "FPMSet", "build_fpm", "save_fpms", "load_fpms", "fft_flops",
@@ -15,6 +16,6 @@ __all__ = [
     "determine_pad_length", "smooth_candidates", "pad_to_smooth", "is_smooth",
     "pfft_lb", "pfft_fpm", "pfft_fpm_pad", "pfft_fpm_czt", "czt_dft",
     "segment_row_ffts", "plan_segment_batches",
-    "plan_pfft", "PfftPlan",
+    "plan_pfft", "PfftPlan", "PlanConfig",
     "pfft3_lb", "pfft3_fpm", "pfft3_fpm_pad", "pfft3_distributed",
 ]

@@ -1,30 +1,49 @@
-"""Plan-style user API (mirrors fftw's plan/execute lifecycle).
+"""Plan-style user API (mirrors fftw's plan/execute/wisdom lifecycle).
 
-    plan = plan_pfft(n=4096, fpms=fpms, method="fpm-pad", eps=0.05)
+    plan = plan_pfft(n=4096, fpms=fpms, method="fpm-pad", tune="estimate")
     out  = plan.execute(signal)     # jit-compiled, reusable
 
-The plan captures everything host-side (partition d, pad lengths) once, so
-``execute`` is a pure jitted function — the analogue of building an fftw
-plan once and calling ``fftw_execute`` repeatedly (the only thread-safe op,
-as the paper notes in §IV).
+The plan captures everything host-side once — the partition ``d``, the pad
+lengths, *and* the execution variant (``PlanConfig``: radix, fused,
+batched, pad strategy) — so ``execute`` is a pure jitted function: the
+analogue of building an fftw plan once and calling ``fftw_execute``
+repeatedly (the only thread-safe op, as the paper notes in §IV).
+
+``tune`` selects how the variant is chosen (fftw's ESTIMATE/MEASURE):
+
+* ``"off"`` — the default config (library FFT, batched dispatch), or an
+  explicit ``config=``/legacy flags.
+* ``"estimate"`` — rank the candidate space with the cost model
+  (``repro.plan.cost``); no device work.
+* ``"measure"`` — additionally time the top-k candidates on device.
+
+``wisdom=path`` consults/feeds the persistent store (``repro.plan.wisdom``)
+keyed by (n, dtype, p, method, backend): a hit skips tuning entirely, and
+a measured choice is recorded so fresh processes are served from disk.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal
+import warnings
+import zlib
+from typing import Any, Callable, Literal
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.fpm import FPMSet
-from repro.core.padding import determine_pad_length
 from repro.core.partition import PartitionResult, lb_partition, partition_rows
 from repro.core.pfft import _pfft_limb, czt_dft, _segments
-from repro.core.padding import smooth_candidates
+from repro.plan.config import PlanConfig
+from repro.plan.tune import tune_config
+from repro.plan.wisdom import lookup_wisdom, record_wisdom, wisdom_key
 
 Method = Literal["lb", "fpm", "fpm-pad", "fpm-czt"]
+TuneMode = Literal["off", "estimate", "measure"]
+
+_PAD_STRATEGY = {"lb": "none", "fpm": "none", "fpm-pad": "fpm", "fpm-czt": "czt"}
 
 __all__ = ["PfftPlan", "plan_pfft"]
 
@@ -35,23 +54,134 @@ class PfftPlan:
     method: Method
     partition: PartitionResult
     pad_lengths: np.ndarray | None
+    config: PlanConfig
+    tuning: dict[str, Any]
     _fn: Callable[[jnp.ndarray], jnp.ndarray]
 
+    _batched_fns: dict[int, Callable] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
     def execute(self, m: jnp.ndarray) -> jnp.ndarray:
-        if m.shape != (self.n, self.n):
-            raise ValueError(f"plan is for {self.n}x{self.n}, got {m.shape}")
-        return self._fn(m)
+        """Run the planned transform; leading batch dims are vmapped.
+
+        ``m``: ``(..., n, n)``.  The czt method builds its phases around
+        axis-0 segment slicing, so it stays 2-D-only for now.  Batched
+        wrappers are built (and jitted) once per batch rank and cached —
+        execute stays the plan-once/run-many hot path.
+        """
+        if m.ndim < 2 or m.shape[-2:] != (self.n, self.n):
+            raise ValueError(
+                f"plan is for ({self.n}, {self.n}) signals "
+                f"(optionally with leading batch dims), got {m.shape}")
+        if m.ndim == 2:
+            return self._fn(m)
+        if self.method == "fpm-czt":
+            raise ValueError(
+                f"method='fpm-czt' plans execute one ({self.n}, {self.n}) "
+                f"matrix at a time; got batched shape {m.shape}")
+        fn = self._batched_fns.get(m.ndim)
+        if fn is None:
+            fn = self._fn
+            for _ in range(m.ndim - 2):
+                fn = jax.vmap(fn)
+            fn = jax.jit(fn)
+            self._batched_fns[m.ndim] = fn
+        return fn(m)
 
     @property
     def d(self) -> np.ndarray:
         return self.partition.d
 
 
+def _resolve_config(n: int, method: Method, part: PartitionResult,
+                    pads: np.ndarray | None, fpms: FPMSet | None,
+                    tune: TuneMode, wisdom: str | None,
+                    config: PlanConfig | None, dtype: str
+                    ) -> tuple[PlanConfig, dict[str, Any]]:
+    """Pick the plan's execution variant and say where it came from.
+
+    Resolution order: explicit config > wisdom hit > tuner > default.
+    A wisdom hit applies even at ``tune="off"`` — passing ``wisdom=path``
+    *is* the request to use stored plans (FFTW reads wisdom regardless of
+    planner rigor).  ``tuning["source"]`` records which branch won — the
+    CI smoke test asserts a warm wisdom file yields ``"wisdom"`` (no
+    re-measure).
+    """
+    pad_strategy = _PAD_STRATEGY[method]
+    tuning: dict[str, Any] = {"mode": tune}
+    if config is not None:
+        tuning["source"] = "explicit"
+        return config, tuning
+    if method == "fpm-czt":
+        # The czt pipeline has a single execution shape today; its real
+        # tunable (the per-processor FFT length) is already FPM-chosen.
+        tuning["source"] = "fixed"
+        return PlanConfig(pad="czt"), tuning
+
+    # The lb partition is a function of (n, p); the FPM partitions (and
+    # pad lengths) depend on the FPMSet and eps, so they digest into the
+    # key — a different model must not be served another model's config.
+    detail = None
+    if method != "lb":
+        raw = np.asarray(part.d, dtype=np.int64).tobytes()
+        if pads is not None:
+            raw += np.asarray(pads, dtype=np.int64).tobytes()
+        detail = format(zlib.crc32(raw), "08x")
+    key = wisdom_key(n=n, dtype=dtype, p=len(part.d), method=method,
+                     backend=jax.default_backend(), detail=detail)
+    tuning["wisdom_key"] = key
+    if wisdom is not None:
+        hit = lookup_wisdom(wisdom, key)
+        if hit is not None:
+            cfg, entry = hit
+            tuning["source"] = "wisdom"
+            tuning["wisdom_entry"] = entry
+            return cfg, tuning
+
+    if tune == "off":
+        tuning["source"] = "off"
+        return PlanConfig(pad=pad_strategy), tuning
+
+    cfg, info = tune_config(n, d=part.d, pad_lengths=pads, fpms=fpms,
+                            mode=tune, pad=pad_strategy,
+                            dtype=np.dtype(dtype))
+    tuning.update(info)
+    tuning["source"] = tune
+    if wisdom is not None and tune == "measure":
+        record_wisdom(wisdom, key, cfg, mode="measure",
+                      time_s=info.get("time_s"))
+    return cfg, tuning
+
+
 def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
               method: Method = "fpm", eps: float = 0.05,
-              use_stockham: bool = False, fused: bool = False) -> PfftPlan:
-    """``fused=True`` routes the unpadded limb phases through the fused
-    FFT->transpose Pallas dispatch (see DESIGN.md §Fused pipeline)."""
+              tune: TuneMode = "off", wisdom: str | None = None,
+              config: PlanConfig | None = None, dtype: str = "complex64",
+              use_stockham: bool | None = None,
+              fused: bool | None = None) -> PfftPlan:
+    """Build a reusable plan; see the module docstring for the lifecycle.
+
+    ``use_stockham=``/``fused=`` are deprecated shims for the pre-planner
+    flag API (they build an explicit config, so tuning is skipped).
+    """
+    if tune not in ("off", "estimate", "measure"):
+        raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
+    if use_stockham is not None or fused is not None:
+        if config is not None:
+            raise ValueError("pass either config= or the legacy flags "
+                             "(use_stockham/fused), not both")
+        warnings.warn(
+            "plan_pfft: use_stockham=/fused= are deprecated; pass "
+            "config=PlanConfig(...) or let tune='estimate'|'measure' choose",
+            DeprecationWarning, stacklevel=2)
+        pad_strategy = _PAD_STRATEGY[method]
+        # The pre-refactor API silently ignored fused= on the padded
+        # methods (pad semantics are per-processor); the shim must too.
+        config = PlanConfig.from_flags(
+            use_stockham=bool(use_stockham),
+            fused=bool(fused) and pad_strategy == "none",
+            pad=pad_strategy)
+
     if method == "lb":
         if p is None:
             raise ValueError("method='lb' requires p")
@@ -62,16 +192,16 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
             raise ValueError(f"method={method!r} requires fpms")
         part = partition_rows(n, fpms, eps)
         if method == "fpm-pad":
-            pads = np.array([determine_pad_length(fpms[i], int(part.d[i]), n)
-                             for i in range(fpms.p)], dtype=np.int64)
+            from repro.plan.pads import fpm_pad_lengths
+            pads = fpm_pad_lengths(fpms, part.d, n)
         elif method == "fpm-czt":
-            cands = smooth_candidates(2 * n - 1, limit_ratio=2.0)
-            pads = np.array(
-                [int(cands[int(np.argmin([fpms[i].time_at(max(int(part.d[i]), 1), int(c))
-                                          for c in cands]))])
-                 for i in range(fpms.p)], dtype=np.int64)
+            from repro.plan.pads import czt_fft_lengths
+            pads = czt_fft_lengths(fpms, part.d, n, limit_ratio=2.0)
         else:
             pads = None
+
+    cfg, tuning = _resolve_config(n, method, part, pads, fpms, tune, wisdom,
+                                  config, dtype)
 
     if method == "fpm-czt":
         segs = _segments(part.d)
@@ -88,8 +218,7 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
         pl = pads
 
         def raw(m):
-            return _pfft_limb(m, d, pad_lengths=pl, use_stockham=use_stockham,
-                              fused=fused)
+            return _pfft_limb(m, d, pad_lengths=pl, config=cfg)
 
     return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
-                    _fn=jax.jit(raw))
+                    config=cfg, tuning=tuning, _fn=jax.jit(raw))

@@ -26,13 +26,16 @@ The distributed (mesh / shard_map) versions live in ``repro.core.pfft_dist``.
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.fpm import FPMSet
-from repro.core.padding import determine_pad_length, smooth_candidates
 from repro.core.partition import PartitionResult, lb_partition, partition_rows
 from repro.fft.fft2d import fft_rows
+from repro.plan.config import PlanConfig
 
 __all__ = [
     "pfft_lb",
@@ -43,6 +46,29 @@ __all__ = [
     "segment_row_ffts",
     "plan_segment_batches",
 ]
+
+
+def _coerce_config(config: PlanConfig | None, caller: str, **flags) -> PlanConfig:
+    """Fold the PR-1 loose booleans into a ``PlanConfig``.
+
+    ``flags`` values of ``None`` mean "not passed"; any explicit value
+    triggers a deprecation warning — the planner (``repro.plan``) owns
+    variant selection now, and one config object is the only way every
+    variant stays choosable from a single point.
+    """
+    passed = {k: v for k, v in flags.items() if v is not None}
+    if config is not None:
+        if passed:
+            raise ValueError(
+                f"{caller}: pass either config= or the legacy flags "
+                f"({', '.join(sorted(passed))}), not both")
+        return config
+    if passed:
+        warnings.warn(
+            f"{caller}: the {', '.join(sorted(passed))} kwarg(s) are "
+            "deprecated; pass config=PlanConfig(...) (see repro.plan)",
+            DeprecationWarning, stacklevel=3)
+    return PlanConfig.from_flags(**passed)
 
 
 def _segments(d: np.ndarray) -> list[tuple[int, int]]:
@@ -71,27 +97,40 @@ def plan_segment_batches(d: np.ndarray, pad_lengths, n: int
     return {length: np.concatenate(idx) for length, idx in groups.items()}
 
 
+def _row_fft(rows: jnp.ndarray, config: PlanConfig,
+             backend: str | None) -> jnp.ndarray:
+    """Row FFTs under ``config``'s backend (``backend`` is an explicit
+    override, e.g. the test suite forcing the Pallas kernel)."""
+    return fft_rows(rows, **config.row_fft_kwargs(backend))
+
+
 def segment_row_ffts(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
-                     use_stockham: bool = False,
+                     config: PlanConfig | None = None,
+                     use_stockham: bool | None = None,
                      backend: str | None = None,
-                     batched: bool = True) -> jnp.ndarray:
+                     batched: bool | None = None) -> jnp.ndarray:
     """Step 2/4 of PFFT-FPM: processor i runs row FFTs on its d_i rows.
 
     ``pad_lengths[i]`` (optional) is N_padded for processor i; rows are
     zero-padded to that length, transformed, and cropped back to N bins.
 
-    ``batched=True`` (default) groups segments by pad length and issues one
-    FFT dispatch per distinct length (see ``plan_segment_batches``) instead
-    of one per processor — on p processors sharing a plan this turns p
-    kernel launches into one.  ``batched=False`` keeps the per-segment loop
-    (the paper's literal per-group calls; the microbenchmark compares both).
+    ``config`` (a ``repro.plan.PlanConfig``) selects the execution variant;
+    its ``batched=True`` default groups segments by pad length and issues
+    one FFT dispatch per distinct length (see ``plan_segment_batches``)
+    instead of one per processor — on p processors sharing a plan this
+    turns p kernel launches into one.  ``batched=False`` keeps the
+    per-segment loop (the paper's literal per-group calls; the
+    microbenchmark compares both).  The loose ``use_stockham=``/``batched=``
+    kwargs are deprecated shims for the pre-planner API.
     """
+    config = _coerce_config(config, "segment_row_ffts",
+                            use_stockham=use_stockham, batched=batched)
     n = m.shape[-1]
     if int(np.sum(np.asarray(d))) != m.shape[0]:
         raise ValueError(
             f"distribution sums to {int(np.sum(np.asarray(d)))} rows, "
             f"matrix has {m.shape[0]}")
-    if batched:
+    if config.batched:
         plan = plan_segment_batches(d, pad_lengths, n)
         if len(plan) == 1:
             # Single plan covering every row in order: one dispatch, no
@@ -100,16 +139,14 @@ def segment_row_ffts(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
             if len(idx) == m.shape[0] and np.array_equal(idx, np.arange(len(idx))):
                 if length > n:
                     mp = jnp.pad(m, ((0, 0), (0, length - n)))
-                    return fft_rows(mp, use_stockham=use_stockham,
-                                    backend=backend)[:, :n]
-                return fft_rows(m, use_stockham=use_stockham, backend=backend)
+                    return _row_fft(mp, config, backend)[:, :n]
+                return _row_fft(m, config, backend)
         out = jnp.zeros(m.shape, jnp.result_type(m, jnp.complex64))
         for length, idx in plan.items():
             rows = m[idx]
             if length > n:
                 rows = jnp.pad(rows, ((0, 0), (0, length - n)))
-            res = fft_rows(rows, use_stockham=use_stockham,
-                           backend=backend)[:, :n]
+            res = _row_fft(rows, config, backend)[:, :n]
             out = out.at[idx].set(res)
         return out
     outs = []
@@ -120,74 +157,89 @@ def segment_row_ffts(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
         if pad_lengths is not None and int(pad_lengths[i]) > n:
             npad = int(pad_lengths[i])
             seg = jnp.pad(seg, ((0, 0), (0, npad - n)))
-            outs.append(fft_rows(seg, use_stockham=use_stockham,
-                                 backend=backend)[:, :n])
+            outs.append(_row_fft(seg, config, backend)[:, :n])
         else:
-            outs.append(fft_rows(seg, use_stockham=use_stockham,
-                                 backend=backend))
+            outs.append(_row_fft(seg, config, backend))
     return jnp.concatenate(outs, axis=0)
 
 
 def _pfft_limb(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
-               use_stockham: bool = False, fused: bool = False) -> jnp.ndarray:
+               config: PlanConfig | None = None,
+               use_stockham: bool | None = None,
+               fused: bool | None = None) -> jnp.ndarray:
     """Paper Algorithm 3 (PFFT_LIMB): rows -> T -> rows -> T.
 
-    ``fused=True`` runs each (row FFTs, transpose) phase as one fused
-    Pallas dispatch when the whole matrix shares a single plan (no
+    ``config.fused=True`` runs each (row FFTs, transpose) phase as one
+    fused Pallas dispatch when the whole matrix shares a single plan (no
     per-segment padding and power-of-two N) — segmentation is then purely
     a scheduling notion, so the fused whole-matrix transform computes the
     identical value with no intermediate HBM matrix.  Padded distributions
     keep the batched segment path (the pad semantics are per-processor).
+    The loose ``use_stockham=``/``fused=`` kwargs are deprecated shims.
     """
+    config = _coerce_config(config, "_pfft_limb",
+                            use_stockham=use_stockham, fused=fused)
     if m.ndim != 2 or m.shape[0] != m.shape[1]:
         raise ValueError("PFFT operates on square N x N signal matrices")
-    if fused and pad_lengths is None:
+    if config.fused and pad_lengths is None:
         # Segmentation without padding is purely a scheduling notion, so
         # the whole-matrix fused phase computes the identical value.
         # fft_rows_then_transpose itself falls back to the unfused
         # computation when the kernel doesn't apply (non-pow2 N,
         # dtypes wider than the f32 planes).
         from repro.fft.fft2d import fft_rows_then_transpose
-        m = fft_rows_then_transpose(m)
-        m = fft_rows_then_transpose(m)
+        # radix=2 means the pure-jnp Stockham backend elsewhere, not a
+        # kernel radix: only an explicit radix-4 reaches the fused kernel
+        # (None lets it auto-pick 4, the pre-refactor behavior).
+        fused_radix = config.radix if config.radix == 4 else None
+        m = fft_rows_then_transpose(m, radix=fused_radix)
+        m = fft_rows_then_transpose(m, radix=fused_radix)
         return m
-    m = segment_row_ffts(m, d, pad_lengths=pad_lengths, use_stockham=use_stockham)
+    m = segment_row_ffts(m, d, pad_lengths=pad_lengths, config=config)
     m = m.T
-    m = segment_row_ffts(m, d, pad_lengths=pad_lengths, use_stockham=use_stockham)
+    m = segment_row_ffts(m, d, pad_lengths=pad_lengths, config=config)
     m = m.T
     return m
 
 
-def pfft_lb(m: jnp.ndarray, p: int, *, use_stockham: bool = False,
-            fused: bool = False) -> jnp.ndarray:
+def pfft_lb(m: jnp.ndarray, p: int, *, use_stockham: bool | None = None,
+            fused: bool | None = None,
+            config: PlanConfig | None = None) -> jnp.ndarray:
     """PFFT-LB (paper §III-B): even row distribution over p processors."""
+    cfg = _coerce_config(config, "pfft_lb",
+                         use_stockham=use_stockham, fused=fused)
     d = lb_partition(m.shape[0], p).d
-    return _pfft_limb(m, d, use_stockham=use_stockham, fused=fused)
+    return _pfft_limb(m, d, config=cfg)
 
 
 def pfft_fpm(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
-             use_stockham: bool = False, fused: bool = False,
+             use_stockham: bool | None = None, fused: bool | None = None,
+             config: PlanConfig | None = None,
              return_partition: bool = False):
     """PFFT-FPM (paper §III-C / Alg. 1): FPM-optimal (possibly imbalanced)
     row distribution, then the 4-step row-column pipeline."""
     n = m.shape[0]
+    cfg = _coerce_config(config, "pfft_fpm",
+                         use_stockham=use_stockham, fused=fused)
     part: PartitionResult = partition_rows(n, fpms, eps)
-    out = _pfft_limb(m, part.d, use_stockham=use_stockham, fused=fused)
+    out = _pfft_limb(m, part.d, config=cfg)
     return (out, part) if return_partition else out
 
 
 def pfft_fpm_pad(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
-                 use_stockham: bool = False,
+                 use_stockham: bool | None = None,
+                 config: PlanConfig | None = None,
                  return_partition: bool = False):
     """PFFT-FPM-PAD (paper §III-D): PFFT-FPM + per-processor row padding
     N -> N_padded_i determined from the FPMs (padded-signal DFT semantics)."""
+    from repro.plan.pads import fpm_pad_lengths  # lazy: plan imports core
     n = m.shape[0]
+    cfg = _coerce_config(config, "pfft_fpm_pad", use_stockham=use_stockham)
+    if config is None:
+        cfg = dataclasses.replace(cfg, pad="fpm")
     part = partition_rows(n, fpms, eps)
-    pads = np.array(
-        [determine_pad_length(fpms[i], int(part.d[i]), n) for i in range(fpms.p)],
-        dtype=np.int64,
-    )
-    out = _pfft_limb(m, part.d, pad_lengths=pads, use_stockham=use_stockham)
+    pads = fpm_pad_lengths(fpms, part.d, n)
+    out = _pfft_limb(m, part.d, pad_lengths=pads, config=cfg)
     return (out, part, pads) if return_partition else out
 
 
@@ -225,27 +277,18 @@ def pfft_fpm_czt(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
     """PFFT-FPM with exact padded transforms: each processor runs its row
     DFTs through the chirp-Z identity at an FPM-chosen smooth FFT length.
     Output equals the exact 2-D DFT (unlike PFFT-FPM-PAD's interpolation)."""
+    from repro.plan.pads import czt_fft_lengths  # lazy: plan imports core
     n = m.shape[0]
     part = partition_rows(n, fpms, eps)
-    min_m = 2 * n - 1
-    cands = smooth_candidates(min_m, limit_ratio=2.0)
-
-    def best_len(i: int) -> int:
-        d_i = int(part.d[i])
-        if d_i == 0:
-            return int(cands[0])
-        times = [fpms[i].time_at(d_i, int(c)) for c in cands]
-        return int(cands[int(np.argmin(times))])
-
-    lens = [best_len(i) for i in range(fpms.p)]
+    lens = czt_fft_lengths(fpms, part.d, n, limit_ratio=2.0)
 
     def phase(mat: jnp.ndarray) -> jnp.ndarray:
         outs = []
         for i, (lo, hi) in enumerate(_segments(part.d)):
             if hi > lo:
-                outs.append(czt_dft(mat[lo:hi], lens[i]))
+                outs.append(czt_dft(mat[lo:hi], int(lens[i])))
         return jnp.concatenate(outs, axis=0)
 
     out = phase(m).T
     out = phase(out).T
-    return (out, part, np.array(lens)) if return_partition else out
+    return (out, part, lens) if return_partition else out

@@ -34,6 +34,7 @@ work vs. masked padding; see ``ragged_row_layout``.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Literal
 
 import numpy as np
@@ -45,25 +46,26 @@ from jax.experimental.shard_map import shard_map
 from repro.core.padding import pad_to_smooth
 from repro.core.pfft import czt_dft
 from repro.fft.fft2d import fft_rows
+from repro.plan.config import PlanConfig
 
 __all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout"]
 
 
 def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
-               pad_len: int, use_stockham: bool,
+               pad_len: int, config: PlanConfig,
                backend: str | None) -> jnp.ndarray:
     """Row FFTs on a local block under the selected padding semantics."""
     if padded == "czt":
         return czt_dft(block, pad_len)
+    kw = config.row_fft_kwargs(backend)
     if padded == "crop" and pad_len > n:
         block = jnp.pad(block, ((0, 0), (0, pad_len - n)))
-        return fft_rows(block, use_stockham=use_stockham,
-                        backend=backend)[:, :n]
-    return fft_rows(block, use_stockham=use_stockham, backend=backend)
+        return fft_rows(block, **kw)[:, :n]
+    return fft_rows(block, **kw)
 
 
 def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
-                 padded: str | None, pad_len: int, use_stockham: bool,
+                 padded: str | None, pad_len: int, config: PlanConfig,
                  backend: str | None = None,
                  pipeline_panels: int = 1) -> jnp.ndarray:
     """One (row FFT -> distributed transpose) phase on a local block.
@@ -85,7 +87,7 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     monolithic phase.
     """
     fft = functools.partial(_local_fft, n=n, padded=padded, pad_len=pad_len,
-                            use_stockham=use_stockham, backend=backend)
+                            config=config, backend=backend)
     a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
                             split_axis=1, concat_axis=0, tiled=True)
     n_loc = block.shape[0]
@@ -115,33 +117,65 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     return out.reshape(rows_out, p * k * c)
 
 
+def _coerce_dist_config(config: PlanConfig | None,
+                        padded: str | None,
+                        use_stockham: bool | None,
+                        pipeline_panels: int | None) -> PlanConfig:
+    """Fold the legacy loose kwargs into a ``PlanConfig`` (deprecated shims)."""
+    if config is not None:
+        if use_stockham is not None or pipeline_panels is not None:
+            raise ValueError("pass either config= or the legacy kwargs "
+                             "(use_stockham/pipeline_panels), not both")
+        if padded is not None and config.dist_padded != padded:
+            raise ValueError(
+                f"config.pad={config.pad!r} conflicts with padded={padded!r}")
+        return config
+    if use_stockham is not None or pipeline_panels is not None:
+        warnings.warn(
+            "pfft2_distributed: use_stockham=/pipeline_panels= are "
+            "deprecated; pass config=PlanConfig(...) (see repro.plan)",
+            DeprecationWarning, stacklevel=3)
+    return PlanConfig(
+        radix=2 if use_stockham else None,
+        pad={"crop": "fpm", "czt": "czt", None: "none"}[padded],
+        pipeline_panels=int(pipeline_panels) if pipeline_panels else 1)
+
+
 def pfft2_distributed(
     m: jnp.ndarray,
     mesh: Mesh,
     axis_name: str = "fft",
     *,
+    config: PlanConfig | None = None,
     padded: Literal["crop", "czt", None] = None,
     pad_len: int | None = None,
-    use_stockham: bool = False,
+    use_stockham: bool | None = None,
     backend: str | None = None,
-    pipeline_panels: int = 1,
+    pipeline_panels: int | None = None,
 ) -> jnp.ndarray:
     """Distributed 2-D DFT of a square matrix sharded by rows over ``axis_name``.
 
-    ``pad_len``: FPM-chosen local FFT length (defaults to the model-free
-    smooth size for 'crop', next pow2 >= 2N-1 for 'czt').
-
+    ``config`` selects the execution variant (``PlanConfig``): its ``pad``
+    strategy maps to the ``padded`` semantics ('fpm' -> 'crop',
+    'czt' -> 'czt'), ``radix`` picks the local row-FFT backend, and
     ``pipeline_panels=k`` overlaps each phase's all_to_all with compute by
     chunking the local rows into k software-pipelined panels (k must
-    divide N/p; k=1 is the monolithic phase).
+    divide N/p; k=1 is the monolithic phase).  The loose ``use_stockham=``/
+    ``pipeline_panels=`` kwargs are deprecated shims.
+
+    ``pad_len``: FPM-chosen local FFT length (defaults to the model-free
+    smooth size for 'crop', next pow2 >= 2N-1 for 'czt').
     """
+    config = _coerce_dist_config(config, padded, use_stockham, pipeline_panels)
+    padded = config.dist_padded
+    panels = config.pipeline_panels
     n = m.shape[0]
     p = mesh.shape[axis_name]
     if n % p:
         raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
-    if pipeline_panels > 1 and (n // p) % pipeline_panels:
+    if panels > 1 and (n // p) % panels:
         raise ValueError(
-            f"pipeline_panels={pipeline_panels} must divide local rows {n // p}")
+            f"pipeline_panels={panels} must divide local rows {n // p}")
     if pad_len is None:
         if padded == "crop":
             pad_len = pad_to_smooth(n)
@@ -151,6 +185,10 @@ def pfft2_distributed(
             pad_len = n
 
     spec_rows = P(axis_name, None)
+    phase = functools.partial(
+        _local_phase, axis_name=axis_name, n=n, padded=padded,
+        pad_len=pad_len, config=config, backend=backend,
+        pipeline_panels=panels)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,
@@ -158,14 +196,8 @@ def pfft2_distributed(
     )
     def _run(block):
         # Phase 1: row FFTs + distributed transpose.
-        block = _local_phase(block, axis_name, n, padded=padded,
-                             pad_len=pad_len, use_stockham=use_stockham,
-                             backend=backend, pipeline_panels=pipeline_panels)
         # Phase 2: (original-)column FFTs + distributed transpose back.
-        block = _local_phase(block, axis_name, n, padded=padded,
-                             pad_len=pad_len, use_stockham=use_stockham,
-                             backend=backend, pipeline_panels=pipeline_panels)
-        return block
+        return phase(phase(block))
 
     return _run(m)
 

@@ -20,26 +20,30 @@ __all__ = ["fft2d_rowcol", "fft_rows", "fft_rows_then_transpose"]
 
 
 def fft_rows(m: jnp.ndarray, *, use_stockham: bool = False,
-             backend: str | None = None) -> jnp.ndarray:
+             backend: str | None = None,
+             radix: int | None = None) -> jnp.ndarray:
     """1-D FFT along the last axis.
 
     backend: None/'xla' -> jnp.fft; 'stockham' -> pure-jnp radix-2;
     'pallas' -> the Pallas TPU kernel (interpret-mode on CPU).  Power-of-two
-    lengths required for stockham/pallas; XLA otherwise.
+    lengths required for stockham/pallas; XLA otherwise.  ``radix`` feeds
+    the Pallas kernel's Stockham radix (None auto-selects; the planner's
+    ``PlanConfig.radix`` lands here).
     """
     n = m.shape[-1]
     if backend is None:
         backend = "stockham" if use_stockham else "xla"
     if backend == "pallas" and not (n & (n - 1)):
         from repro.kernels.fft.ops import fft_rows_op
-        return fft_rows_op(m)
+        return fft_rows_op(m, radix=radix)
     if backend == "stockham" and not (n & (n - 1)):
         return fft1d_stockham(m)
     return jnp.fft.fft(m, axis=-1)
 
 
 def fft_rows_then_transpose(m: jnp.ndarray, *,
-                            backend: str | None = None) -> jnp.ndarray:
+                            backend: str | None = None,
+                            radix: int | None = None) -> jnp.ndarray:
     """One fused phase: ``FFT_rows(m).T`` without the intermediate matrix.
 
     Dispatches to the fused Pallas kernel when it applies (2-D input,
@@ -53,7 +57,7 @@ def fft_rows_then_transpose(m: jnp.ndarray, *,
                 and jnp.result_type(m, jnp.complex64) == jnp.complex64)
     if eligible and backend in (None, "pallas", "fused"):
         from repro.kernels.fused.ops import fft_rows_transpose_op
-        return fft_rows_transpose_op(m)
+        return fft_rows_transpose_op(m, radix=radix)
     return fft_rows(m, backend=backend).swapaxes(-1, -2)
 
 

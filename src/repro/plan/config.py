@@ -1,0 +1,117 @@
+"""PlanConfig — the single description of *how* a PFFT executes.
+
+After PR 1 the repo had four fast execution variants, each behind its own
+hand-set boolean (``use_stockham``, ``fused``, ``batched``,
+``pipeline_panels``).  ``PlanConfig`` replaces that flag soup with one
+hashable value the planner can enumerate, price, measure, and persist:
+
+* ``radix`` selects the row-FFT implementation: ``None`` is the library
+  (XLA) FFT, ``2`` the pure-jnp radix-2 Stockham, ``4`` the Pallas
+  radix-4 kernel (half the passes; see DESIGN.md §Row-FFT kernel).
+* ``fused`` runs each (row FFT, transpose) phase as one fused Pallas
+  dispatch — no intermediate HBM matrix.
+* ``batched`` groups same-length segments into one FFT dispatch per
+  distinct plan (``plan_segment_batches``).
+* ``pad`` names the padding strategy: ``"none"``, ``"fpm"`` (FPM-chosen
+  pad-and-crop, the paper's PFFT-FPM-PAD / distributed ``'crop'``), or
+  ``"czt"`` (exact Bluestein at a model-chosen length).
+* ``pipeline_panels`` software-pipelines the distributed all_to_all
+  against per-panel FFTs (``pfft2_distributed``).
+
+The dataclass is frozen so configs can key dicts and be deduplicated; the
+dict round-trip (``to_dict``/``from_dict``) is the wisdom wire format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+PadStrategy = Literal["none", "fpm", "czt"]
+
+_VALID_RADIX = (None, 2, 4)
+_VALID_PAD = ("none", "fpm", "czt")
+
+__all__ = ["PlanConfig", "PadStrategy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    radix: int | None = None
+    fused: bool = False
+    batched: bool = True
+    pad: str = "none"
+    pipeline_panels: int = 1
+
+    def __post_init__(self) -> None:
+        if self.radix not in _VALID_RADIX:
+            raise ValueError(f"radix must be one of {_VALID_RADIX}, got {self.radix!r}")
+        if self.pad not in _VALID_PAD:
+            raise ValueError(f"pad must be one of {_VALID_PAD}, got {self.pad!r}")
+        if self.pipeline_panels < 1:
+            raise ValueError(f"pipeline_panels must be >= 1, got {self.pipeline_panels}")
+        if self.fused and self.pad != "none":
+            raise ValueError("fused phases have no per-segment padding; pad must be 'none'")
+
+    # ---- derived views -------------------------------------------------
+
+    @property
+    def fft_backend(self) -> str:
+        """Row-FFT backend implied by ``radix`` (see ``repro.fft.fft_rows``)."""
+        return {None: "xla", 2: "stockham", 4: "pallas"}[self.radix]
+
+    @property
+    def use_stockham(self) -> bool:
+        """Back-compat view of the PR-1 ``use_stockham`` boolean."""
+        return self.radix == 2
+
+    @property
+    def dist_padded(self) -> str | None:
+        """``pfft2_distributed``'s ``padded`` vocabulary for this strategy."""
+        return {"none": None, "fpm": "crop", "czt": "czt"}[self.pad]
+
+    def row_fft_kwargs(self, backend: str | None = None) -> dict[str, Any]:
+        """``fft_rows`` kwargs for this config (the one place the
+        backend-override + radix-only-for-pallas gating lives; both the
+        single-host and distributed row phases route through it).
+        ``backend`` is an explicit override, e.g. tests forcing the kernel.
+        """
+        eff = backend if backend is not None else self.fft_backend
+        return {"backend": eff,
+                "radix": self.radix if eff == "pallas" else None}
+
+    # ---- legacy-flag bridge --------------------------------------------
+
+    @classmethod
+    def from_flags(cls, *, use_stockham: bool = False, fused: bool = False,
+                   batched: bool = True, pad: str = "none",
+                   pipeline_panels: int = 1) -> "PlanConfig":
+        """Map the PR-1 loose booleans onto a config (deprecation shims)."""
+        return cls(radix=2 if use_stockham else None, fused=bool(fused),
+                   batched=bool(batched), pad=pad,
+                   pipeline_panels=int(pipeline_panels))
+
+    # ---- wisdom wire format --------------------------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "PlanConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown PlanConfig fields: {sorted(unknown)}")
+        return cls(**d)
+
+    def describe(self) -> str:
+        """Short human-readable tag (benchmark records, log lines)."""
+        parts = [f"radix={self.radix or 'xla'}"]
+        if self.fused:
+            parts.append("fused")
+        parts.append("batched" if self.batched else "looped")
+        if self.pad != "none":
+            parts.append(f"pad={self.pad}")
+        if self.pipeline_panels > 1:
+            parts.append(f"panels={self.pipeline_panels}")
+        return ",".join(parts)

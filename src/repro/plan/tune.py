@@ -1,0 +1,182 @@
+"""Estimate/measure tuner — FFTW's planner loop over ``PlanConfig`` space.
+
+``candidate_configs`` enumerates the valid variant space for a problem
+(radix x fused x batched x pipeline_panels, pruned by structural
+constraints); ``tune_config`` ranks it:
+
+* ``mode="estimate"`` — cost model only (``plan.cost``), no device work.
+  FFTW's ESTIMATE: instant, right whenever the model's ranking is.
+* ``mode="measure"`` — time the ``top_k`` cheapest candidates on device
+  (``measure_configs``: interleaved round-robin, per-config min) and take
+  the winner.  FFTW's MEASURE: pays seconds once so every later execute
+  is served by the best plan.
+
+The caller (``plan_pfft`` / the microbenchmark) persists the result via
+``plan.wisdom`` so measurement happens once per (n, dtype, p, method,
+backend) per machine.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.fpm import FPMSet
+from repro.plan.config import PlanConfig
+from repro.plan.cost import CostParams, _segment_work, estimate_cost
+
+__all__ = ["candidate_configs", "measure_configs", "tune_config"]
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and not (n & (n - 1))
+
+
+def candidate_configs(n: int, *, pad: str = "none", d=None,
+                      panels: Sequence[int] = (1,)) -> list[PlanConfig]:
+    """Valid ``PlanConfig`` candidates for an n x n problem.
+
+    ``pad`` is fixed by the method (it is semantics, not a tunable);
+    ``fused`` requires a power-of-two N and no per-segment padding;
+    the kernel radices require a power-of-two N; ``batched`` only
+    matters when the partition has more than one non-empty segment.
+    """
+    radices: list[int | None] = [None]
+    if _is_pow2(n):
+        radices += [2, 4]
+    multi_segment = d is None or int((np.asarray(d) > 0).sum()) > 1
+    batch_opts = (True, False) if multi_segment else (True,)
+
+    out: list[PlanConfig] = []
+    for k in panels:
+        for radix in radices:
+            for batched in batch_opts:
+                out.append(PlanConfig(radix=radix, batched=batched, pad=pad,
+                                      pipeline_panels=k))
+        if pad == "none" and _is_pow2(n):
+            # Fused collapses each phase to one dispatch; segmentation (and
+            # therefore batched) is moot, and the kernel is radix-4.
+            out.append(PlanConfig(radix=4, fused=True, pipeline_panels=k))
+    return out
+
+
+def measure_configs(configs: Sequence[PlanConfig], n: int, *, d=None,
+                    pad_lengths=None, dtype=np.complex64,
+                    rounds: int = 3) -> dict[PlanConfig, float]:
+    """On-device seconds of the jitted limb per config: {config: best_s}.
+
+    Interleaved in a per-round *shuffled* order, per-config min over
+    ``rounds``, with an untimed same-config warm run before every timed
+    one: close variants (batched vs looped) differ by far less than the
+    episode-to-episode jitter, and a fixed visiting order would tax each
+    config by whatever allocator/cache state its fixed neighbour leaves
+    behind (one warm run does not fully neutralise an interpret-mode
+    Pallas predecessor).  Shuffling varies the predecessor; min keeps
+    each config's best-context episode.  This is the shared harness of
+    measure-mode tuning and the planner microbenchmark.
+
+    ``d=None`` means one whole-matrix segment (the cost model's
+    convention).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pfft import _pfft_limb  # lazy: core imports plan.config
+
+    d_eff = np.asarray(d) if d is not None else np.array([n], dtype=np.int64)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((n, n))
+                     + 1j * rng.standard_normal((n, n))).astype(dtype))
+    pairs = []
+    for cfg in configs:
+        fn = jax.jit(lambda m, c=cfg: _pfft_limb(m, d_eff,
+                                                 pad_lengths=pad_lengths,
+                                                 config=c))
+        jax.block_until_ready(fn(x))  # compile
+        pairs.append((cfg, fn))
+    times = {cfg: float("inf") for cfg, _ in pairs}
+    for _ in range(max(rounds, 1)):
+        for i in rng.permutation(len(pairs)):
+            cfg, fn = pairs[int(i)]
+            jax.block_until_ready(fn(x))  # warm: evict neighbour's state
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            times[cfg] = min(times[cfg], time.perf_counter() - t0)
+    return times
+
+
+def _behavior_key(cfg: PlanConfig, n: int, d, pad_lengths) -> tuple:
+    """What program actually runs under ``cfg`` for this problem.
+
+    Kernel backends fall back to XLA for non-power-of-two effective
+    lengths (``fft_rows``), so e.g. radix=None/2/4 are one and the same
+    program when every padded length is non-pow2 — measuring more than
+    one of them wastes the measure budget on rubber-stamping.
+    """
+    lengths = sorted({length for _, length in _segment_work(n, d, pad_lengths)})
+    if cfg.fused:
+        return ("fused", tuple(lengths))
+    per_len = []
+    for length in lengths:
+        kw = cfg.row_fft_kwargs()
+        if kw["backend"] != "xla" and (length & (length - 1)):
+            kw = {"backend": "xla", "radix": None}
+        per_len.append((length, kw["backend"], kw["radix"]))
+    return (cfg.batched, cfg.pipeline_panels, tuple(per_len))
+
+
+def tune_config(n: int, *, d=None, pad_lengths=None, fpms: FPMSet | None = None,
+                mode: str = "estimate", pad: str = "none",
+                params: CostParams | None = None, top_k: int = 3,
+                panels: Sequence[int] = (1,), comm_bytes: float = 0.0,
+                dtype=np.complex64, reps: int = 3
+                ) -> tuple[PlanConfig, dict]:
+    """Pick the best ``PlanConfig`` for the problem; returns (config, info).
+
+    ``info`` carries the full ranking (``"ranked"``: (config dict, predicted
+    seconds), cheapest first) and, in measure mode, the on-device times of
+    the ``top_k`` finalists (``"measured"``) — the planner's audit trail,
+    also persisted into wisdom entries.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    if d is not None:
+        d = np.asarray(d)
+
+    cands = candidate_configs(n, pad=pad, d=d, panels=panels)
+    if params is None:
+        params = CostParams.for_backend()
+    ranked = sorted(
+        ((cfg, estimate_cost(cfg, n=n, d=d, pad_lengths=pad_lengths,
+                             fpms=fpms, params=params, comm_bytes=comm_bytes))
+         for cfg in cands),
+        key=lambda kv: kv[1])
+    info: dict = {
+        "mode": mode,
+        "ranked": [(cfg.to_dict(), float(c)) for cfg, c in ranked],
+    }
+
+    if mode == "estimate":
+        return ranked[0][0], info
+
+    if comm_bytes:
+        raise NotImplementedError(
+            "measure mode times the single-host limb; distributed configs "
+            "are estimate-only for now (ROADMAP open item)")
+    # One finalist per distinct *program*: ties in the ranking are often
+    # configs whose differences are erased by runtime fallbacks.
+    finalists, seen = [], set()
+    for cfg, _ in ranked:
+        key = _behavior_key(cfg, n, d, pad_lengths)
+        if key not in seen:
+            seen.add(key)
+            finalists.append(cfg)
+        if len(finalists) >= max(top_k, 1):
+            break
+    measured = measure_configs(finalists, n, d=d, pad_lengths=pad_lengths,
+                               dtype=dtype, rounds=reps)
+    winner = min(measured, key=measured.get)
+    info["measured"] = [(cfg.to_dict(), float(t)) for cfg, t in measured.items()]
+    info["time_s"] = float(measured[winner])
+    return winner, info

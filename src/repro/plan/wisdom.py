@@ -1,0 +1,108 @@
+"""Persistent planner wisdom — FFTW's wisdom lifecycle for this repo.
+
+A wisdom file is a small versioned JSON document mapping a plan key
+
+    n=<N>|dtype=<dtype>|p=<p>|method=<method>|backend=<backend>
+
+to the ``PlanConfig`` a previous tuning run chose (plus how it was chosen
+and the measured time, when there is one).  ``plan_pfft(tune=...,
+wisdom=path)`` consults it before tuning, so a process that measured once
+warms every later session — the serving story the ROADMAP needs: plans
+for hot sizes are selected once and then served from disk.
+
+Writes are atomic (write a sibling ``.tmp``, then ``os.replace`` — the
+same idiom as ``save_fpms``) so concurrent readers never observe a torn
+file.  A version bump invalidates the whole store: old entries were
+chosen under a different cost model / config schema, so a mismatch is
+treated as a miss, never an error.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.plan.config import PlanConfig
+
+__all__ = [
+    "WISDOM_VERSION",
+    "wisdom_key",
+    "load_wisdom",
+    "lookup_wisdom",
+    "record_wisdom",
+]
+
+WISDOM_VERSION = 1
+
+
+def wisdom_key(*, n: int, dtype: str, p: int, method: str, backend: str,
+               detail: str | None = None) -> str:
+    """Canonical store key; every field that changes the best config is in it.
+
+    ``detail`` carries anything beyond (n, dtype, p, method, backend) the
+    best config depends on — for the FPM methods, a digest of the
+    partition and pad lengths (different FPMSets/eps give different
+    partitions, which change the dispatch counts the tuner prices).
+    Method 'lb' needs none: its partition is a function of (n, p).
+    """
+    base = f"n={int(n)}|dtype={dtype}|p={int(p)}|method={method}|backend={backend}"
+    return base if detail is None else f"{base}|part={detail}"
+
+
+def load_wisdom(path: str) -> dict:
+    """Entries of a wisdom file; {} on missing, corrupt, or version-mismatched
+    files (all are cache misses, never errors)."""
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    if not isinstance(doc, dict) or doc.get("version") != WISDOM_VERSION:
+        return {}
+    entries = doc.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def lookup_wisdom(path: str, key: str) -> tuple[PlanConfig, dict] | None:
+    """(config, full entry) for ``key``, or None on any kind of miss."""
+    entry = load_wisdom(path).get(key)
+    if not isinstance(entry, dict):
+        return None
+    try:
+        return PlanConfig.from_dict(entry["config"]), entry
+    except (KeyError, TypeError, ValueError):
+        return None  # schema drift inside an entry is also just a miss
+
+
+def record_wisdom(path: str, key: str, config: PlanConfig, *, mode: str,
+                  time_s: float | None = None, extra: dict | None = None) -> None:
+    """Insert/overwrite one entry, atomically rewriting the store.
+
+    The load-modify-replace cycle holds an exclusive flock on a ``.lock``
+    sibling so concurrent writers (a benchmark warming sizes while a
+    serving process records its own measure) don't drop each other's
+    entries; on platforms without ``fcntl`` the write is merely atomic.
+    """
+    lock_fh = None
+    try:
+        import fcntl
+        lock_fh = open(path + ".lock", "w")
+        fcntl.flock(lock_fh, fcntl.LOCK_EX)
+    except (ImportError, OSError):
+        pass
+    try:
+        entries = load_wisdom(path)
+        entry: dict = {"config": config.to_dict(), "mode": mode}
+        if time_s is not None:
+            entry["time_s"] = float(time_s)
+        if extra:
+            entry.update(extra)
+        entries[key] = entry
+        doc = {"version": WISDOM_VERSION, "entries": entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        if lock_fh is not None:
+            lock_fh.close()

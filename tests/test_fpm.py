@@ -87,6 +87,49 @@ def test_build_marks_unmeasurable_as_nan():
     assert np.isnan(f.speed[0, 1])
 
 
+def test_roundtrip_preserves_nan_unmeasured_points(tmp_path):
+    """NaN marks points that exceeded memory (paper §V-B); persistence must
+    keep them NaN, not zero or drop them."""
+    xs = np.array([1, 2])
+    ys = np.array([16, 32, 64])
+    sp = np.array([[1.0, np.nan, 3.0], [np.nan, 2.0, 4.0]])
+    s = FPMSet([SpeedFunction(xs, ys, sp, name="partial")])
+    p = str(tmp_path / "fpm.npz")
+    save_fpms(p, s)
+    s2 = load_fpms(p)
+    np.testing.assert_array_equal(np.isnan(s2[0].speed), np.isnan(sp))
+    np.testing.assert_allclose(s2[0].speed[np.isfinite(sp)], sp[np.isfinite(sp)])
+    assert s2[0].name == "partial"
+
+
+def test_load_without_names_sidecar_defaults(tmp_path):
+    """The .json names sidecar is advisory: deleting it degrades names to
+    the default, never errors."""
+    import os
+    s = FPMSet([make_fn(name="A"), make_fn(name="B")])
+    p = str(tmp_path / "fpm.npz")
+    save_fpms(p, s)
+    assert os.path.exists(p + ".json")
+    with open(p + ".json") as fh:
+        import json
+        assert json.load(fh)["names"] == ["A", "B"]
+    os.unlink(p + ".json")
+    s2 = load_fpms(p)
+    assert [f.name for f in s2] == ["P", "P"]
+    np.testing.assert_allclose(s2[1].speed, s[1].speed)
+
+
+def test_save_is_atomic_no_tmp_left_behind(tmp_path):
+    import os
+    s = FPMSet([make_fn()])
+    p = str(tmp_path / "fpm.npz")
+    save_fpms(p, s)
+    assert not os.path.exists(p + ".tmp")
+    # overwrite in place keeps the store readable
+    save_fpms(p, FPMSet([make_fn(scale=2.0)]))
+    np.testing.assert_allclose(load_fpms(p)[0].speed, make_fn(scale=2.0).speed)
+
+
 @given(x=st.integers(1, 100), y=st.sampled_from([16, 64, 256, 1024]))
 @settings(max_examples=50, deadline=None)
 def test_fft_flops_positive_monotone(x, y):

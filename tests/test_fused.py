@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from repro.core.pfft import (plan_segment_batches, pfft_lb,
                              segment_row_ffts)
 from repro.fft.fft2d import fft2d_rowcol, fft_rows_then_transpose
+from repro.plan import PlanConfig
 from repro.kernels.fft.kernel import (stockham_planes, stockham_planes_radix4,
                                       stockham_stage_count)
 from repro.kernels.fft.ops import fft_rows_op, pick_radix
@@ -131,7 +132,8 @@ def test_fused_phase_fallbacks(rng):
 
 def test_pfft_lb_fused_matches(rng):
     m = csignal(rng, 64, 64)
-    np.testing.assert_allclose(np.asarray(pfft_lb(m, 3, fused=True)),
+    np.testing.assert_allclose(
+        np.asarray(pfft_lb(m, 3, config=PlanConfig(fused=True))),
                                np.asarray(jnp.fft.fft2(m)), atol=2e-2)
 
 
@@ -154,7 +156,9 @@ def test_segment_batched_equals_looped(rng, pads):
     m = csignal(rng, n, n)
     d = np.array([10, 7, 15])
     pads = np.array(pads) if pads is not None else None
-    batched = segment_row_ffts(m, d, pad_lengths=pads, batched=True)
-    looped = segment_row_ffts(m, d, pad_lengths=pads, batched=False)
+    batched = segment_row_ffts(m, d, pad_lengths=pads,
+                               config=PlanConfig(batched=True))
+    looped = segment_row_ffts(m, d, pad_lengths=pads,
+                              config=PlanConfig(batched=False))
     np.testing.assert_allclose(np.asarray(batched), np.asarray(looped),
                                atol=1e-4)

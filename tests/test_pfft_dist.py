@@ -22,6 +22,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, {src!r})
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.pfft_dist import pfft2_distributed, make_pfft2_fn, ragged_row_layout
+from repro.plan import PlanConfig
 
 mesh = jax.make_mesh((8,), ("fft",))
 rng = np.random.default_rng(3)
@@ -35,7 +36,7 @@ assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "plain"
 out = pfft2_distributed(m, mesh, "fft", padded="czt")
 assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "czt"
 
-out = pfft2_distributed(m, mesh, "fft", use_stockham=True)
+out = pfft2_distributed(m, mesh, "fft", config=PlanConfig(radix=2))
 assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "stockham"
 
 out = make_pfft2_fn(mesh, 64)(m)
@@ -55,15 +56,15 @@ assert rows == 10 and counts.sum() == 64
 
 # software-pipelined panels: identical result to the monolithic phase
 for k in (2, 4, 8):
-    out = pfft2_distributed(m, mesh, "fft", pipeline_panels=k)
+    out = pfft2_distributed(m, mesh, "fft", config=PlanConfig(pipeline_panels=k))
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "panels %d" % k
-out = pfft2_distributed(m, mesh, "fft", padded="czt", pipeline_panels=4)
+out = pfft2_distributed(m, mesh, "fft", config=PlanConfig(pad="czt", pipeline_panels=4))
 assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "czt panels"
-out = pfft2_distributed(m, mesh, "fft", padded="crop", pad_len=pad,
-                        pipeline_panels=2)
+out = pfft2_distributed(m, mesh, "fft", pad_len=pad,
+                        config=PlanConfig(pad="fpm", pipeline_panels=2))
 assert float(jnp.max(jnp.abs(out - ref2))) < 1e-2, "crop panels"
 try:
-    pfft2_distributed(m, mesh, "fft", pipeline_panels=3)
+    pfft2_distributed(m, mesh, "fft", config=PlanConfig(pipeline_panels=3))
     raise SystemExit("expected ValueError for non-dividing panel count")
 except ValueError:
     pass
@@ -96,7 +97,8 @@ def test_pipelined_single_device_mesh():
     rng = np.random.default_rng(1)
     m = jnp.asarray((rng.standard_normal((32, 32))
                      + 1j * rng.standard_normal((32, 32))).astype(np.complex64))
-    out = pfft2_distributed(m, mesh, "fft", pipeline_panels=4)
+    from repro.plan import PlanConfig
+    out = pfft2_distributed(m, mesh, "fft", config=PlanConfig(pipeline_panels=4))
     np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.fft.fft2(m)),
                                atol=1e-2)
 
