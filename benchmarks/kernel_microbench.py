@@ -17,6 +17,12 @@ acceptance checks assert on):
                pick) vs the estimate-planned config — records whether the
                cost model's pick lands within the measured envelope
                (``within_best_pct`` / ``not_worst``).
+  schedule     heterogeneous per-segment planning (one slow + p-1 fast
+               FPMs): the per-segment ``tune_schedule`` pick vs the best
+               homogeneous config — records the distinct config count,
+               the makespan-estimate delta, and the measured limb times
+               of both (hetero schedule wisdom is recorded under the
+               same key ``plan_pfft`` would look up).
 
 ``--wisdom W`` writes each benched size's best *measured* config into the
 wisdom store ``W`` (keyed exactly as ``plan_pfft`` keys its lookups), so a
@@ -40,14 +46,17 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import signal, time_fn
-from repro.core.pfft import plan_segment_batches, segment_row_ffts
+from repro.core.fpm import FPMSet, SpeedFunction
+from repro.core.pfft import _pfft_limb, plan_segment_batches, segment_row_ffts
 from repro.core.partition import lb_partition
 from repro.kernels.fft.kernel import stockham_stage_count
 from repro.kernels.fft.ops import fft_rows_op
 from repro.kernels.fused.ops import fft_rows_transpose_op
 from repro.kernels.transpose.ops import transpose_op
-from repro.plan import (PlanConfig, candidate_configs, measure_configs,
-                        record_wisdom, tune_config, wisdom_key)
+from repro.plan import (CostParams, PlanConfig, candidate_configs,
+                        estimate_cost, estimate_schedule_cost,
+                        measure_configs, partition_digest, record_wisdom,
+                        tune_config, tune_schedule, wisdom_key)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
@@ -158,6 +167,87 @@ def bench_planner(sizes, p: int, wisdom_path: str | None = None) -> list[dict]:
     return recs
 
 
+def bench_schedule(n: int, p: int, wisdom_path: str | None = None
+                   ) -> list[dict]:
+    """Heterogeneous per-segment planning vs the best homogeneous config.
+
+    A synthetic one-slow/(p-1)-fast FPM set — the ISSUE-3 acceptance
+    scenario — whose partition *and* pad lengths are derived exactly the
+    way ``plan_pfft(method="fpm-pad")`` derives them (``partition_rows``
+    + ``fpm_pad_lengths``), so the recorded wisdom key is the one a
+    ``plan_pfft`` call with the same FPMSet looks up.  The fast
+    processors' speed peaks at the next pow2 (padding wins for them);
+    the slow processor's is flat (padding only adds flops), yielding
+    mixed effective lengths.  Estimates use the accelerator cost
+    constants (the per-segment choice is about *which* variants differ,
+    which interpret-mode CPU constants collapse); measured limb times
+    use this host.  The makespan-estimate delta and the distinct-config
+    count are the structural facts CI pins.
+    """
+    from repro.core.partition import partition_rows
+    from repro.plan.pads import fpm_pad_lengths
+
+    npow2 = 1 << int(np.ceil(np.log2(n + 1)))
+    xs = np.array(sorted({1, max(n // 2, 1), n}))
+    ys = np.array(sorted({n, npow2, 2 * npow2}))
+    fast = np.tile([1e9, 4e9, 1e9], (len(xs), 1))
+    slow = np.full((len(xs), len(ys)), 2.5e8)
+    fpms = FPMSet([SpeedFunction(xs, ys, slow if i == 0 else fast,
+                                 name=f"P{i}") for i in range(p)])
+    part = partition_rows(n, fpms, 0.05)
+    d = part.d
+    pads = fpm_pad_lengths(fpms, d, n)
+    params = CostParams.for_backend("tpu")
+
+    sched, info = tune_schedule(n, d=d, pad_lengths=pads, fpms=fpms,
+                                mode="estimate", pad="fpm", params=params)
+    # The *assembled* heterogeneous estimate, not the winner's (the winner
+    # is already the argmin of this very comparison — recording it would
+    # make hetero_not_worse_est tautologically true).
+    est_hetero = (info["heterogeneous"]["est_s"] if "heterogeneous" in info
+                  else estimate_schedule_cost(sched, fpms=fpms, params=params))
+    homo_cfg, est_homo = min(
+        ((c, estimate_cost(c, n=n, d=d, pad_lengths=pads, fpms=fpms,
+                           params=params))
+         for c in candidate_configs(n, pad="fpm", d=d)),
+        key=lambda kv: kv[1])
+
+    m = signal(n, seed=4)
+    t_hetero = time_fn(lambda m=m: _pfft_limb(m, d, schedule=sched))
+    t_homo = time_fn(lambda m=m, c=homo_cfg: _pfft_limb(
+        m, d, pad_lengths=pads, config=c))
+    rec = {
+        "bench": "schedule", "n": int(n), "p": int(p),
+        "schedule": sched.describe(),
+        "distinct_configs": len(sched.configs),
+        "dispatch_groups": len(sched.batch_groups()),
+        "homogeneous_config": homo_cfg.describe(),
+        "makespan_est_hetero_s": float(est_hetero),
+        "makespan_est_homo_s": float(est_homo),
+        "makespan_est_delta_s": float(est_homo - est_hetero),
+        "hetero_not_worse_est": bool(est_hetero <= est_homo),
+        "time_hetero_s": t_hetero,
+        "time_homo_s": t_homo,
+        "chosen": info["chosen"],
+    }
+    if wisdom_path:
+        # Record what this host actually measured fastest — the estimate
+        # deliberately used accelerator constants, so on CPU the
+        # homogeneous library config can beat the kernel-bearing
+        # schedule; wisdom must never serve a measured-slower plan.
+        import jax
+        from repro.plan import SegmentSchedule
+        winner, t_best = ((sched, t_hetero) if t_hetero <= t_homo else
+                          (SegmentSchedule.homogeneous(homo_cfg, n, d, pads),
+                           t_homo))
+        key = wisdom_key(n=n, dtype="complex64", p=p, method="fpm-pad",
+                         backend=jax.default_backend(),
+                         detail=partition_digest(d, pads))
+        record_wisdom(wisdom_path, key, winner, mode="measure",
+                      time_s=t_best, extra={"origin": "kernel_microbench"})
+    return [rec]
+
+
 def run(quick: bool = False, out: str = DEFAULT_OUT,
         wisdom: str | None = None) -> dict:
     radix_sizes = [64, 256] if quick else [64, 256, 1024]
@@ -167,7 +257,9 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
                + bench_fused(fused_sizes)
                + bench_segments(n=128 if quick else 256, p=4,
                                 pad_to=160 if quick else 320)
-               + bench_planner(planner_sizes, p=4, wisdom_path=wisdom))
+               + bench_planner(planner_sizes, p=4, wisdom_path=wisdom)
+               + bench_schedule(n=48 if quick else 96, p=4,
+                                wisdom_path=wisdom))
     import jax
     payload = {
         "backend": jax.default_backend(),

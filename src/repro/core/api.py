@@ -4,29 +4,35 @@
     out  = plan.execute(signal)     # jit-compiled, reusable
 
 The plan captures everything host-side once — the partition ``d``, the pad
-lengths, *and* the execution variant (``PlanConfig``: radix, fused,
-batched, pad strategy) — so ``execute`` is a pure jitted function: the
-analogue of building an fftw plan once and calling ``fftw_execute``
-repeatedly (the only thread-safe op, as the paper notes in §IV).
+lengths, *and* the execution schedule (``SegmentSchedule``: one
+``PlanConfig`` per segment, so a slow processor can keep the library FFT
+while pow2-padded fast ones take the kernel) — so ``execute`` is a pure
+jitted function: the analogue of building an fftw plan once and calling
+``fftw_execute`` repeatedly (the only thread-safe op, as the paper notes
+in §IV).  A single explicit ``config=`` becomes the degenerate
+one-entry-per-segment schedule, keeping the PR-2 API a thin shim.
 
 ``tune`` selects how the variant is chosen (fftw's ESTIMATE/MEASURE):
 
 * ``"off"`` — the default config (library FFT, batched dispatch), or an
   explicit ``config=``/legacy flags.
 * ``"estimate"`` — rank the candidate space with the cost model
-  (``repro.plan.cost``); no device work.
-* ``"measure"`` — additionally time the top-k candidates on device.
+  (``repro.plan.cost``), per distinct effective FFT length
+  (``tune_schedule``); no device work.
+* ``"measure"`` — additionally time the Pareto top-k candidates per
+  length group on device.
 
 ``wisdom=path`` consults/feeds the persistent store (``repro.plan.wisdom``)
 keyed by (n, dtype, p, method, backend): a hit skips tuning entirely, and
 a measured choice is recorded so fresh processes are served from disk.
+When the store holds enough measured entries, the estimate cost model is
+re-calibrated from them (``repro.plan.calibrate``) before ranking.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import warnings
-import zlib
 from typing import Any, Callable, Literal
 
 import numpy as np
@@ -35,10 +41,13 @@ import jax.numpy as jnp
 
 from repro.core.fpm import FPMSet
 from repro.core.partition import PartitionResult, lb_partition, partition_rows
-from repro.core.pfft import _pfft_limb, czt_dft, _segments
+from repro.core.pfft import _pfft_limb
+from repro.plan.calibrate import fit_cost_params
 from repro.plan.config import PlanConfig
-from repro.plan.tune import tune_config
-from repro.plan.wisdom import lookup_wisdom, record_wisdom, wisdom_key
+from repro.plan.schedule import SegmentSchedule
+from repro.plan.tune import tune_schedule
+from repro.plan.wisdom import (lookup_wisdom, partition_digest, record_wisdom,
+                               wisdom_key)
 
 Method = Literal["lb", "fpm", "fpm-pad", "fpm-czt"]
 TuneMode = Literal["off", "estimate", "measure"]
@@ -55,6 +64,7 @@ class PfftPlan:
     partition: PartitionResult
     pad_lengths: np.ndarray | None
     config: PlanConfig
+    schedule: SegmentSchedule
     tuning: dict[str, Any]
     _fn: Callable[[jnp.ndarray], jnp.ndarray]
 
@@ -64,10 +74,11 @@ class PfftPlan:
     def execute(self, m: jnp.ndarray) -> jnp.ndarray:
         """Run the planned transform; leading batch dims are vmapped.
 
-        ``m``: ``(..., n, n)``.  The czt method builds its phases around
-        axis-0 segment slicing, so it stays 2-D-only for now.  Batched
-        wrappers are built (and jitted) once per batch rank and cached —
-        execute stays the plan-once/run-many hot path.
+        ``m``: ``(..., n, n)``.  Batched wrappers are built (and jitted)
+        once per batch rank and cached — execute stays the
+        plan-once/run-many hot path.  Every method vmaps, czt included
+        (its phases are ordinary jnp programs since the schedule
+        executor took over the per-segment slicing).
         """
         if m.ndim < 2 or m.shape[-2:] != (self.n, self.n):
             raise ValueError(
@@ -75,10 +86,6 @@ class PfftPlan:
                 f"(optionally with leading batch dims), got {m.shape}")
         if m.ndim == 2:
             return self._fn(m)
-        if self.method == "fpm-czt":
-            raise ValueError(
-                f"method='fpm-czt' plans execute one ({self.n}, {self.n}) "
-                f"matrix at a time; got batched shape {m.shape}")
         fn = self._batched_fns.get(m.ndim)
         if fn is None:
             fn = self._fn
@@ -93,64 +100,93 @@ class PfftPlan:
         return self.partition.d
 
 
-def _resolve_config(n: int, method: Method, part: PartitionResult,
-                    pads: np.ndarray | None, fpms: FPMSet | None,
-                    tune: TuneMode, wisdom: str | None,
-                    config: PlanConfig | None, dtype: str
-                    ) -> tuple[PlanConfig, dict[str, Any]]:
-    """Pick the plan's execution variant and say where it came from.
+def _resolve_schedule(n: int, method: Method, part: PartitionResult,
+                      pads: np.ndarray | None, fpms: FPMSet | None,
+                      tune: TuneMode, wisdom: str | None,
+                      config: PlanConfig | None, dtype: str
+                      ) -> tuple[SegmentSchedule, dict[str, Any]]:
+    """Pick the plan's execution schedule and say where it came from.
 
     Resolution order: explicit config > wisdom hit > tuner > default.
     A wisdom hit applies even at ``tune="off"`` — passing ``wisdom=path``
     *is* the request to use stored plans (FFTW reads wisdom regardless of
-    planner rigor).  ``tuning["source"]`` records which branch won — the
-    CI smoke test asserts a warm wisdom file yields ``"wisdom"`` (no
-    re-measure).
+    planner rigor) — but only when the stored schedule still describes
+    the current partition (a stale structure is a miss, never an error).
+    ``tuning["source"]`` records which branch won — the CI smoke test
+    asserts a warm wisdom file yields ``"wisdom"`` (no re-measure).
     """
     pad_strategy = _PAD_STRATEGY[method]
+
+    def normalize(cfg: PlanConfig) -> PlanConfig:
+        """Force the method's pad semantics onto a config.
+
+        ``pad`` is semantics, not a tunable: the method owns it (PR-2's
+        executor applied the pad lengths regardless of ``config.pad``,
+        and the schedule executor consults the entry's pad to pick
+        czt-vs-crop, so an explicit ``PlanConfig()`` on fpm-czt must
+        still run Bluestein, not pad-and-crop garbage).  ``fused`` drops
+        with it on padded methods, like the legacy shim documents.
+        """
+        if cfg.pad == pad_strategy:
+            return cfg
+        return dataclasses.replace(
+            cfg, pad=pad_strategy,
+            fused=cfg.fused and pad_strategy == "none")
+
     tuning: dict[str, Any] = {"mode": tune}
     if config is not None:
         tuning["source"] = "explicit"
-        return config, tuning
-    if method == "fpm-czt":
-        # The czt pipeline has a single execution shape today; its real
-        # tunable (the per-processor FFT length) is already FPM-chosen.
-        tuning["source"] = "fixed"
-        return PlanConfig(pad="czt"), tuning
+        return SegmentSchedule.homogeneous(normalize(config), n, part.d,
+                                           pads), tuning
 
     # The lb partition is a function of (n, p); the FPM partitions (and
     # pad lengths) depend on the FPMSet and eps, so they digest into the
-    # key — a different model must not be served another model's config.
-    detail = None
-    if method != "lb":
-        raw = np.asarray(part.d, dtype=np.int64).tobytes()
-        if pads is not None:
-            raw += np.asarray(pads, dtype=np.int64).tobytes()
-        detail = format(zlib.crc32(raw), "08x")
+    # key — a different model must not be served another model's plan.
+    detail = partition_digest(part.d, pads) if method != "lb" else None
     key = wisdom_key(n=n, dtype=dtype, p=len(part.d), method=method,
                      backend=jax.default_backend(), detail=detail)
     tuning["wisdom_key"] = key
     if wisdom is not None:
         hit = lookup_wisdom(wisdom, key)
         if hit is not None:
-            cfg, entry = hit
-            tuning["source"] = "wisdom"
-            tuning["wisdom_entry"] = entry
-            return cfg, tuning
+            plan, entry = hit
+            if isinstance(plan, SegmentSchedule):
+                # Structure AND pad semantics must match: an entry whose
+                # config pad drifted from the method's strategy would
+                # execute the wrong transform (czt vs pad-and-crop), so
+                # it is a miss like every other kind of drift.
+                ok = (plan.matches(part.d, pads)
+                      and all(e.config.pad == pad_strategy for e in plan))
+                schedule = plan if ok else None
+            else:
+                schedule = SegmentSchedule.homogeneous(normalize(plan), n,
+                                                       part.d, pads)
+            if schedule is not None:
+                tuning["source"] = "wisdom"
+                tuning["wisdom_entry"] = entry
+                return schedule, tuning
 
     if tune == "off":
         tuning["source"] = "off"
-        return PlanConfig(pad=pad_strategy), tuning
+        return SegmentSchedule.homogeneous(
+            PlanConfig(pad=pad_strategy), n, part.d, pads), tuning
 
-    cfg, info = tune_config(n, d=part.d, pad_lengths=pads, fpms=fpms,
-                            mode=tune, pad=pad_strategy,
-                            dtype=np.dtype(dtype))
+    params = None
+    if wisdom is not None:
+        # Enough measured entries on this host re-fit the cost constants
+        # (falls back to the hard-coded ones below the sample threshold).
+        from repro.plan.cost import CostParams
+        params = fit_cost_params(wisdom)
+        tuning["calibrated"] = params != CostParams.for_backend()
+    schedule, info = tune_schedule(n, d=part.d, pad_lengths=pads, fpms=fpms,
+                                   mode=tune, pad=pad_strategy, params=params,
+                                   dtype=np.dtype(dtype))
     tuning.update(info)
     tuning["source"] = tune
     if wisdom is not None and tune == "measure":
-        record_wisdom(wisdom, key, cfg, mode="measure",
+        record_wisdom(wisdom, key, schedule, mode="measure",
                       time_s=info.get("time_s"))
-    return cfg, tuning
+    return schedule, tuning
 
 
 def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
@@ -200,25 +236,13 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
         else:
             pads = None
 
-    cfg, tuning = _resolve_config(n, method, part, pads, fpms, tune, wisdom,
-                                  config, dtype)
+    schedule, tuning = _resolve_schedule(n, method, part, pads, fpms, tune,
+                                         wisdom, config, dtype)
+    d = part.d
 
-    if method == "fpm-czt":
-        segs = _segments(part.d)
-        lens = pads
-
-        def raw(m):
-            def phase(mat):
-                outs = [czt_dft(mat[lo:hi], int(lens[i]))
-                        for i, (lo, hi) in enumerate(segs) if hi > lo]
-                return jnp.concatenate(outs, axis=0)
-            return phase(phase(m).T).T
-    else:
-        d = part.d
-        pl = pads
-
-        def raw(m):
-            return _pfft_limb(m, d, pad_lengths=pl, config=cfg)
+    def raw(m):
+        return _pfft_limb(m, d, schedule=schedule)
 
     return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
-                    config=cfg, tuning=tuning, _fn=jax.jit(raw))
+                    config=schedule.anchor_config, schedule=schedule,
+                    tuning=tuning, _fn=jax.jit(raw))

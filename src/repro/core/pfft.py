@@ -36,6 +36,7 @@ from repro.core.fpm import FPMSet
 from repro.core.partition import PartitionResult, lb_partition, partition_rows
 from repro.fft.fft2d import fft_rows
 from repro.plan.config import PlanConfig
+from repro.plan.schedule import SegmentSchedule
 
 __all__ = [
     "pfft_lb",
@@ -76,16 +77,34 @@ def _segments(d: np.ndarray) -> list[tuple[int, int]]:
     return [(int(offs[i]), int(offs[i + 1])) for i in range(len(d))]
 
 
-def plan_segment_batches(d: np.ndarray, pad_lengths, n: int
-                         ) -> dict[int, np.ndarray]:
-    """Group the segments of distribution ``d`` by effective FFT length.
+def plan_segment_batches(d: np.ndarray, pad_lengths, n: int, configs=None):
+    """Group the segments of distribution ``d`` into dispatch batches.
 
-    Returns {fft_length: row_indices}: all rows transformed at the same
+    Without ``configs``, groups by effective FFT length alone and returns
+    ``{fft_length: row_indices}``: all rows transformed at the same
     length form one batch — one FFT dispatch per distinct *plan*, the
     moral equivalent of the paper sharing an ``fftw_plan_many_dft`` across
     same-shaped groups.  len(result) is the dispatch count of the batched
     ``segment_row_ffts``.
+
+    With ``configs`` (one ``PlanConfig`` per processor — a heterogeneous
+    schedule's assignment), groups by ``(effective_length, config)`` and
+    returns ``{(length, config): row_indices}``: same-length segments on
+    *different* execution variants get different dispatches, so a slow
+    segment can keep the library FFT while a fast one takes the kernel
+    in the same phase (see ``repro.plan.schedule``).  A ``batched=False``
+    config opts its segment out of sharing — those entries keep their
+    per-segment key ``(length, config, index)`` so ``len(result)`` stays
+    the executor's true dispatch count.
     """
+    if configs is not None:
+        sched = SegmentSchedule.from_parts(n, d, pad_lengths, list(configs))
+        out: dict[tuple, np.ndarray] = {}
+        for length, cfg, idx in sched.batch_groups():
+            key = ((length, cfg) if cfg.batched
+                   else (length, cfg, int(idx[0])))
+            out[key] = idx
+        return out
     groups: dict[int, list[np.ndarray]] = {}
     for i, (lo, hi) in enumerate(_segments(d)):
         if hi == lo:
@@ -104,84 +123,114 @@ def _row_fft(rows: jnp.ndarray, config: PlanConfig,
     return fft_rows(rows, **config.row_fft_kwargs(backend))
 
 
+def _group_row_ffts(rows: jnp.ndarray, length: int, n: int,
+                    config: PlanConfig, backend: str | None) -> jnp.ndarray:
+    """One dispatch group's program: transform ``rows`` at effective
+    ``length`` under ``config``, cropped back to N bins.
+
+    ``pad='czt'`` entries run the exact Bluestein transform at the
+    entry's length (``czt_dft``); pad-and-crop entries zero-pad, FFT,
+    and crop (the paper's padded-signal semantics); unpadded entries
+    FFT in place.
+    """
+    if config.pad == "czt" and length > n:
+        return czt_dft(rows, length)
+    if length > n:
+        rows = jnp.pad(rows, ((0, 0), (0, length - n)))
+        return _row_fft(rows, config, backend)[:, :n]
+    return _row_fft(rows, config, backend)
+
+
 def segment_row_ffts(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
                      config: PlanConfig | None = None,
+                     schedule: SegmentSchedule | None = None,
                      use_stockham: bool | None = None,
                      backend: str | None = None,
                      batched: bool | None = None) -> jnp.ndarray:
     """Step 2/4 of PFFT-FPM: processor i runs row FFTs on its d_i rows.
 
     ``pad_lengths[i]`` (optional) is N_padded for processor i; rows are
-    zero-padded to that length, transformed, and cropped back to N bins.
+    zero-padded to that length, transformed, and cropped back to N bins
+    (or chirp-Z-transformed at it when the config says ``pad='czt'``).
 
-    ``config`` (a ``repro.plan.PlanConfig``) selects the execution variant;
-    its ``batched=True`` default groups segments by pad length and issues
-    one FFT dispatch per distinct length (see ``plan_segment_batches``)
-    instead of one per processor — on p processors sharing a plan this
-    turns p kernel launches into one.  ``batched=False`` keeps the
-    per-segment loop (the paper's literal per-group calls; the
-    microbenchmark compares both).  The loose ``use_stockham=``/``batched=``
+    ``schedule`` (a ``repro.plan.SegmentSchedule``) is the general form:
+    each segment executes its own entry's config, and dispatch groups are
+    ``(effective_length, config)`` — same-length segments on the same
+    variant share one FFT dispatch, segments on different variants get
+    their own.  ``config`` is the homogeneous shim: it becomes the
+    degenerate every-segment-alike schedule, whose grouping (by length,
+    ``batched=True``) or per-segment loop (``batched=False``) reproduces
+    the PR-2 behavior exactly.  The loose ``use_stockham=``/``batched=``
     kwargs are deprecated shims for the pre-planner API.
     """
-    config = _coerce_config(config, "segment_row_ffts",
-                            use_stockham=use_stockham, batched=batched)
     n = m.shape[-1]
+    if schedule is not None:
+        if (config is not None or pad_lengths is not None
+                or use_stockham is not None or batched is not None):
+            raise ValueError(
+                "segment_row_ffts: pass either schedule= (which carries its "
+                "own lengths) or config=/pad_lengths=/legacy flags, not both")
+    else:
+        config = _coerce_config(config, "segment_row_ffts",
+                                use_stockham=use_stockham, batched=batched)
+        schedule = SegmentSchedule.homogeneous(config, n, d, pad_lengths)
     if int(np.sum(np.asarray(d))) != m.shape[0]:
         raise ValueError(
             f"distribution sums to {int(np.sum(np.asarray(d)))} rows, "
             f"matrix has {m.shape[0]}")
-    if config.batched:
-        plan = plan_segment_batches(d, pad_lengths, n)
-        if len(plan) == 1:
-            # Single plan covering every row in order: one dispatch, no
-            # gather/scatter at all.
-            (length, idx), = plan.items()
-            if len(idx) == m.shape[0] and np.array_equal(idx, np.arange(len(idx))):
-                if length > n:
-                    mp = jnp.pad(m, ((0, 0), (0, length - n)))
-                    return _row_fft(mp, config, backend)[:, :n]
-                return _row_fft(m, config, backend)
-        out = jnp.zeros(m.shape, jnp.result_type(m, jnp.complex64))
-        for length, idx in plan.items():
-            rows = m[idx]
-            if length > n:
-                rows = jnp.pad(rows, ((0, 0), (0, length - n)))
-            res = _row_fft(rows, config, backend)[:, :n]
-            out = out.at[idx].set(res)
-        return out
-    outs = []
-    for i, (lo, hi) in enumerate(_segments(d)):
-        if hi == lo:
-            continue
-        seg = m[lo:hi]
-        if pad_lengths is not None and int(pad_lengths[i]) > n:
-            npad = int(pad_lengths[i])
-            seg = jnp.pad(seg, ((0, 0), (0, npad - n)))
-            outs.append(_row_fft(seg, config, backend)[:, :n])
-        else:
-            outs.append(_row_fft(seg, config, backend))
-    return jnp.concatenate(outs, axis=0)
+    if schedule.total_rows != m.shape[0]:
+        raise ValueError(
+            f"schedule covers {schedule.total_rows} rows, "
+            f"matrix has {m.shape[0]}")
+
+    groups = schedule.batch_groups()
+    if len(groups) == 1:
+        # Single plan covering every row in order: one dispatch, no
+        # gather/scatter at all.
+        length, cfg, idx = groups[0]
+        if len(idx) == m.shape[0] and np.array_equal(idx, np.arange(len(idx))):
+            return _group_row_ffts(m, length, n, cfg, backend)
+    out = jnp.zeros(m.shape, jnp.result_type(m, jnp.complex64))
+    for length, cfg, idx in groups:
+        res = _group_row_ffts(m[idx], length, n, cfg, backend)
+        out = out.at[idx].set(res)
+    return out
 
 
 def _pfft_limb(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
                config: PlanConfig | None = None,
+               schedule: SegmentSchedule | None = None,
                use_stockham: bool | None = None,
                fused: bool | None = None) -> jnp.ndarray:
     """Paper Algorithm 3 (PFFT_LIMB): rows -> T -> rows -> T.
 
-    ``config.fused=True`` runs each (row FFTs, transpose) phase as one
-    fused Pallas dispatch when the whole matrix shares a single plan (no
-    per-segment padding and power-of-two N) — segmentation is then purely
-    a scheduling notion, so the fused whole-matrix transform computes the
-    identical value with no intermediate HBM matrix.  Padded distributions
-    keep the batched segment path (the pad semantics are per-processor).
-    The loose ``use_stockham=``/``fused=`` kwargs are deprecated shims.
+    ``schedule`` runs each segment under its own entry's config (the
+    heterogeneous executor); ``config`` is the homogeneous shim (it
+    becomes the degenerate schedule).  A homogeneous ``fused=True``
+    schedule with no per-segment padding runs each (row FFTs, transpose)
+    phase as one fused Pallas dispatch — segmentation is then purely a
+    scheduling notion, so the fused whole-matrix transform computes the
+    identical value with no intermediate HBM matrix.  Padded
+    distributions keep the segment path (the pad semantics are
+    per-processor).  The loose ``use_stockham=``/``fused=`` kwargs are
+    deprecated shims.
     """
-    config = _coerce_config(config, "_pfft_limb",
-                            use_stockham=use_stockham, fused=fused)
+    if schedule is not None:
+        if (config is not None or pad_lengths is not None
+                or use_stockham is not None or fused is not None):
+            raise ValueError(
+                "_pfft_limb: pass either schedule= (which carries its own "
+                "lengths) or config=/pad_lengths=/legacy flags, not both")
+    else:
+        config = _coerce_config(config, "_pfft_limb",
+                                use_stockham=use_stockham, fused=fused)
+        schedule = SegmentSchedule.homogeneous(config, m.shape[-1], d,
+                                               pad_lengths)
     if m.ndim != 2 or m.shape[0] != m.shape[1]:
         raise ValueError("PFFT operates on square N x N signal matrices")
-    if config.fused and pad_lengths is None:
+    common = schedule.common_config
+    if (common is not None and common.fused
+            and all(e.length == schedule.n for e in schedule)):
         # Segmentation without padding is purely a scheduling notion, so
         # the whole-matrix fused phase computes the identical value.
         # fft_rows_then_transpose itself falls back to the unfused
@@ -191,13 +240,13 @@ def _pfft_limb(m: jnp.ndarray, d: np.ndarray, *, pad_lengths=None,
         # radix=2 means the pure-jnp Stockham backend elsewhere, not a
         # kernel radix: only an explicit radix-4 reaches the fused kernel
         # (None lets it auto-pick 4, the pre-refactor behavior).
-        fused_radix = config.radix if config.radix == 4 else None
+        fused_radix = common.radix if common.radix == 4 else None
         m = fft_rows_then_transpose(m, radix=fused_radix)
         m = fft_rows_then_transpose(m, radix=fused_radix)
         return m
-    m = segment_row_ffts(m, d, pad_lengths=pad_lengths, config=config)
+    m = segment_row_ffts(m, d, schedule=schedule)
     m = m.T
-    m = segment_row_ffts(m, d, pad_lengths=pad_lengths, config=config)
+    m = segment_row_ffts(m, d, schedule=schedule)
     m = m.T
     return m
 
@@ -276,19 +325,14 @@ def pfft_fpm_czt(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
                  return_partition: bool = False):
     """PFFT-FPM with exact padded transforms: each processor runs its row
     DFTs through the chirp-Z identity at an FPM-chosen smooth FFT length.
-    Output equals the exact 2-D DFT (unlike PFFT-FPM-PAD's interpolation)."""
+    Output equals the exact 2-D DFT (unlike PFFT-FPM-PAD's interpolation).
+
+    Executes through the schedule path, so same-length czt segments share
+    one Bluestein dispatch (``plan_segment_batches`` semantics)."""
     from repro.plan.pads import czt_fft_lengths  # lazy: plan imports core
     n = m.shape[0]
     part = partition_rows(n, fpms, eps)
     lens = czt_fft_lengths(fpms, part.d, n, limit_ratio=2.0)
-
-    def phase(mat: jnp.ndarray) -> jnp.ndarray:
-        outs = []
-        for i, (lo, hi) in enumerate(_segments(part.d)):
-            if hi > lo:
-                outs.append(czt_dft(mat[lo:hi], int(lens[i])))
-        return jnp.concatenate(outs, axis=0)
-
-    out = phase(m).T
-    out = phase(out).T
+    out = _pfft_limb(m, part.d, pad_lengths=lens,
+                     config=PlanConfig(pad="czt"))
     return (out, part, lens) if return_partition else out

@@ -45,8 +45,9 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.padding import pad_to_smooth
 from repro.core.pfft import czt_dft
-from repro.fft.fft2d import fft_rows
+from repro.fft.fft2d import fft_rows, fft_rows_then_transpose
 from repro.plan.config import PlanConfig
+from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout"]
 
@@ -73,10 +74,18 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     block: (n_loc, N) — this device's rows.  Returns (n_loc, N): this
     device's block of the *transposed, row-transformed* matrix.
 
-    With ``pipeline_panels=1`` the phase is monolithic: FFT the whole
-    block, then one tiled ``all_to_all`` (split axis 1 into p column
-    panels, keep panel j from every peer, concat along axis 0), then a
-    local transpose.
+    The phase executes its schedule entry's config.  ``config.fused``
+    runs the local (row FFT, transpose) as one fused Pallas dispatch
+    (``fft_rows_then_transpose``) and swaps the ``all_to_all`` axes to
+    match — since ``a2a(X, split=1, concat=0).T == a2a(X.T, split=0,
+    concat=1)``, the exchange consumes the transposed block directly and
+    the intermediate row-major matrix never exists.  This is what routes
+    the planner's fused pick to pods; unfused configs keep FFT →
+    exchange → local transpose.
+
+    With ``pipeline_panels=1`` the phase is monolithic: transform the
+    whole block, then one tiled ``all_to_all`` (split the column axis
+    into p panels, keep panel j from every peer, concat along rows).
 
     With ``pipeline_panels=k > 1`` the block's rows are chunked into ``k``
     panels and software-pipelined: panel ``i``'s all_to_all is issued
@@ -86,6 +95,16 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     re-interleaved so the output is bit-identical in layout to the
     monolithic phase.
     """
+    fused = config.fused and padded is None
+    if fused:
+        # radix=2 means the pure-jnp Stockham elsewhere, not a kernel
+        # radix: only an explicit radix-4 reaches the fused kernel.
+        fused_radix = config.radix if config.radix == 4 else None
+        fft_t = functools.partial(fft_rows_then_transpose,
+                                  backend=backend, radix=fused_radix)
+        # Transposed blocks exchange with the axis roles swapped.
+        a2a_t = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                                  split_axis=0, concat_axis=1, tiled=True)
     fft = functools.partial(_local_fft, n=n, padded=padded, pad_len=pad_len,
                             config=config, backend=backend)
     a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
@@ -93,39 +112,65 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     n_loc = block.shape[0]
     k = pipeline_panels
     if k <= 1 or n_loc % k:
-        return a2a(fft(block)).T  # (N/p, N): a row-block of M^T
+        if fused:
+            return a2a_t(fft_t(block))  # (N/p, N): a row-block of M^T
+        return a2a(fft(block)).T
 
     c = n_loc // k  # rows per panel
     # Software pipeline: FFT panel 0; then alternate (issue all_to_all of
     # panel i, FFT panel i+1) so each exchange overlaps the next FFT.
+    # Fused panels exchange transposed (see above); their gathered tiles
+    # arrive already column-major, saving the per-panel transpose below.
     gathered = []
-    current = fft(block[:c])
+    current = fft_t(block[:c]) if fused else fft(block[:c])
+    exchange = a2a_t if fused else a2a
     for i in range(1, k):
-        in_flight = a2a(current)           # exchange panel i-1 ...
-        current = fft(block[i * c:(i + 1) * c])  # ... while transforming i
+        in_flight = exchange(current)      # exchange panel i-1 ...
+        nxt = block[i * c:(i + 1) * c]     # ... while transforming i
+        current = fft_t(nxt) if fused else fft(nxt)
         gathered.append(in_flight)
-    gathered.append(a2a(current))
+    gathered.append(exchange(current))
 
-    # Each g_i is (N/k, N/p): peer-major stack of that peer's panel-i rows,
-    # column slice j.  Transposed, its columns are global rows
-    # q*n_loc + i*c + r (q peer-major, r in-panel).  Interleave panels so
-    # output columns are in global row order, matching the monolithic path.
-    p = gathered[0].shape[0] * k // n_loc if n_loc else 1
-    rows_out = gathered[0].shape[1]
-    panels_t = [g.T.reshape(rows_out, p, c) for g in gathered]
+    # Unfused: each g_i is (N/k, N/p): peer-major stack of that peer's
+    # panel-i rows, column slice j.  Transposed, its columns are global
+    # rows q*n_loc + i*c + r (q peer-major, r in-panel).  Fused tiles are
+    # already transposed, (N/p, N/k).  Interleave panels so output
+    # columns are in global row order, matching the monolithic path.
+    tiles = [g if fused else g.T for g in gathered]   # (rows_out, n_loc/k)
+    rows_out = tiles[0].shape[0]
+    p = tiles[0].shape[1] * k // n_loc if n_loc else 1
+    panels_t = [t.reshape(rows_out, p, c) for t in tiles]
     out = jnp.stack(panels_t, axis=2)      # (rows_out, p, k, c)
     return out.reshape(rows_out, p * k * c)
 
 
 def _coerce_dist_config(config: PlanConfig | None,
+                        schedule: SegmentSchedule | None,
                         padded: str | None,
                         use_stockham: bool | None,
                         pipeline_panels: int | None) -> PlanConfig:
-    """Fold the legacy loose kwargs into a ``PlanConfig`` (deprecated shims)."""
+    """Fold the legacy loose kwargs into a ``PlanConfig`` (deprecated shims).
+
+    A ``schedule`` resolves to its common config: the SPMD local phase is
+    one program on every device, so only homogeneous schedules route here
+    (per-device heterogeneity is expressed through the ragged layout and
+    the FPM-chosen local ``pad_len``, not divergent programs).
+    """
+    if schedule is not None:
+        if config is not None:
+            raise ValueError("pass either schedule= or config=, not both")
+        config = schedule.common_config
+        if config is None:
+            raise ValueError(
+                "pfft2_distributed runs one SPMD program per device; a "
+                "heterogeneous schedule (mixed per-segment configs) cannot "
+                "be lowered to shard_map — pass its common config or use "
+                "the single-host executor (repro.core.pfft)")
     if config is not None:
         if use_stockham is not None or pipeline_panels is not None:
-            raise ValueError("pass either config= or the legacy kwargs "
-                             "(use_stockham/pipeline_panels), not both")
+            raise ValueError(
+                f"pass either {'schedule=' if schedule is not None else 'config='}"
+                " or the legacy kwargs (use_stockham/pipeline_panels), not both")
         if padded is not None and config.dist_padded != padded:
             raise ValueError(
                 f"config.pad={config.pad!r} conflicts with padded={padded!r}")
@@ -147,6 +192,7 @@ def pfft2_distributed(
     axis_name: str = "fft",
     *,
     config: PlanConfig | None = None,
+    schedule: SegmentSchedule | None = None,
     padded: Literal["crop", "czt", None] = None,
     pad_len: int | None = None,
     use_stockham: bool | None = None,
@@ -157,16 +203,35 @@ def pfft2_distributed(
 
     ``config`` selects the execution variant (``PlanConfig``): its ``pad``
     strategy maps to the ``padded`` semantics ('fpm' -> 'crop',
-    'czt' -> 'czt'), ``radix`` picks the local row-FFT backend, and
-    ``pipeline_panels=k`` overlaps each phase's all_to_all with compute by
-    chunking the local rows into k software-pipelined panels (k must
-    divide N/p; k=1 is the monolithic phase).  The loose ``use_stockham=``/
-    ``pipeline_panels=`` kwargs are deprecated shims.
+    'czt' -> 'czt'), ``radix`` picks the local row-FFT backend,
+    ``fused`` collapses each local (row FFT, transpose) into one fused
+    dispatch feeding a transposed ``all_to_all`` (the planner's fused
+    pick carries to pods), and ``pipeline_panels=k`` overlaps each
+    phase's all_to_all with compute by chunking the local rows into k
+    software-pipelined panels (k must divide N/p; k=1 is the monolithic
+    phase).  ``schedule`` routes a planner ``SegmentSchedule`` here: the
+    local phase executes its entry's config (SPMD requires the schedule
+    to be homogeneous).  The loose ``use_stockham=``/``pipeline_panels=``
+    kwargs are deprecated shims.
 
     ``pad_len``: FPM-chosen local FFT length (defaults to the model-free
     smooth size for 'crop', next pow2 >= 2N-1 for 'czt').
     """
-    config = _coerce_dist_config(config, padded, use_stockham, pipeline_panels)
+    config = _coerce_dist_config(config, schedule, padded, use_stockham,
+                                 pipeline_panels)
+    if schedule is not None and pad_len is None:
+        # The schedule's entries carry the FPM-chosen effective length —
+        # the very thing the planner picked; honor it rather than the
+        # model-free smooth default.  SPMD runs one program, so the
+        # length must be uniform across entries.
+        lengths = {e.length for e in schedule}
+        if len(lengths) > 1:
+            raise ValueError(
+                "pfft2_distributed runs one SPMD program per device; a "
+                f"schedule with mixed effective lengths {sorted(lengths)} "
+                "cannot be lowered to shard_map — use the single-host "
+                "executor (repro.core.pfft) or pass pad_len explicitly")
+        pad_len = int(next(iter(lengths)))
     padded = config.dist_padded
     panels = config.pipeline_panels
     n = m.shape[0]

@@ -1,25 +1,38 @@
 """Model-driven execution planning (the FFTW plan/wisdom lifecycle).
 
 One selection point for every execution variant: ``PlanConfig`` names a
-variant, ``cost`` prices it from the FPMs plus structural counts,
-``tune`` picks one (estimate = model only, measure = time the finalists),
-``wisdom`` persists the choice per (n, dtype, p, method, backend), and
+variant, ``SegmentSchedule`` assigns one per segment (the heterogeneous
+generalisation — slow processors keep the library FFT while fast ones
+take the kernel), ``cost`` prices both from the FPMs plus structural
+counts, ``tune`` picks one (estimate = model only, measure = time the
+finalists; ``tune_schedule`` prices per distinct effective FFT length),
+``wisdom`` persists the choice per (n, dtype, p, method, backend),
+``calibrate`` fits the cost constants back from measured wisdom, and
 ``pads`` holds the shared FPM pad/CZT-length selection.  The user entry
 point is ``repro.core.api.plan_pfft(tune=..., wisdom=...)``.
 """
 
 from repro.plan.config import PlanConfig
+from repro.plan.schedule import SegmentPlan, SegmentSchedule
 from repro.plan.pads import czt_fft_lengths, fpm_pad_lengths
-from repro.plan.cost import CostParams, estimate_cost, phase_dispatch_count
+from repro.plan.cost import (CostParams, estimate_cost,
+                             estimate_schedule_cost, phase_dispatch_count)
 from repro.plan.wisdom import (WISDOM_VERSION, load_wisdom, lookup_wisdom,
-                               record_wisdom, wisdom_key)
-from repro.plan.tune import candidate_configs, measure_configs, tune_config
+                               partition_digest, record_wisdom, wisdom_key)
+from repro.plan.tune import (candidate_configs, measure_configs,
+                             segment_candidate_configs, tune_config,
+                             tune_schedule)
+from repro.plan.calibrate import fit_cost_params
 
 __all__ = [
     "PlanConfig",
+    "SegmentPlan", "SegmentSchedule",
     "czt_fft_lengths", "fpm_pad_lengths",
-    "CostParams", "estimate_cost", "phase_dispatch_count",
-    "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "record_wisdom",
-    "wisdom_key",
-    "candidate_configs", "measure_configs", "tune_config",
+    "CostParams", "estimate_cost", "estimate_schedule_cost",
+    "phase_dispatch_count",
+    "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "partition_digest",
+    "record_wisdom", "wisdom_key",
+    "candidate_configs", "measure_configs", "segment_candidate_configs",
+    "tune_config", "tune_schedule",
+    "fit_cost_params",
 ]

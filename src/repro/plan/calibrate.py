@@ -1,0 +1,178 @@
+"""Calibrate ``CostParams`` from measured wisdom entries.
+
+The estimate cost model ships hard-coded per-backend constants
+(``CostParams.for_backend``).  Once a machine has accumulated measured
+wisdom — tuner measure runs, microbenchmark sweeps — those entries *are*
+ground truth for this host, so the constants can be fit back from them
+instead of trusted: the paper's model-over-heuristics thesis applied to
+our own cost model.
+
+``fit_cost_params`` solves the model's own per-phase equation
+
+    time/2 − traffic = base_seconds · factor[backend] + dispatches · c_d
+
+as a least-squares system over the measured entries, with one unknown
+per backend factor (xla / stockham / pallas / fused) plus the dispatch
+overhead ``c_d``.  The symbolic factor decomposition comes from
+``cost._factor_term`` — the estimate model and this fit share one
+branch logic and cannot drift.  Each entry contributes its
+makespan-dominant segment's flop-time as the factor feature (schedule
+entries carry exact (rows, length, config) structure; bare-config
+entries assume the even LB partition — the shape the microbenchmark
+warms).  With fewer than ``min_entries`` measured entries, or when the
+fit degenerates (a factor column absent or a non-positive solution),
+the hard-coded constants are kept component-wise — calibration refines,
+never breaks.
+
+File-path fits are cached per (path, mtime): ``plan_pfft(wisdom=...)``
+calibrates on every tuned call, and re-running lstsq over an unchanged
+store would tax the plan-once hot path for nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core.fpm import fft_flops
+from repro.plan.config import PlanConfig
+from repro.plan.cost import (_COMPLEX64_BYTES, _factor_term, CostParams,
+                             phase_dispatch_count)
+from repro.plan.schedule import SegmentSchedule
+from repro.plan.wisdom import load_wisdom
+
+__all__ = ["fit_cost_params"]
+
+_COLS = ("dispatch", "xla", "stockham", "pallas", "fused")
+_FIT_CACHE: dict[tuple, CostParams] = {}
+
+
+def _parse_key(key: str) -> dict[str, str]:
+    out = {}
+    for part in key.split("|"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _entry_structure(entry: dict, n: int, p: int):
+    """((rows, length, config) per segment, dispatches, fused) of one entry."""
+    if "schedule" in entry:
+        sched = SegmentSchedule.from_dict(entry["schedule"])
+        segs = [(e.rows, e.length, e.config) for e in sched.entries]
+        common = sched.common_config
+        fused = common is not None and common.fused
+        dispatches = 1 if fused else len(sched.batch_groups())
+        return segs, dispatches, fused
+    cfg = PlanConfig.from_dict(entry["config"])
+    from repro.core.partition import lb_partition  # lazy: core imports plan
+    d = lb_partition(n, p).d
+    segs = [(int(rows), n, cfg) for rows in d if rows > 0]
+    dispatches = phase_dispatch_count(cfg, n, d, None)
+    return segs, dispatches, cfg.fused
+
+
+def _factor_feature(rows: int, length: int, cfg: PlanConfig,
+                    nominal_flops: float) -> tuple[str, float]:
+    """(factor column, base seconds) such that the modelled segment time
+    is ``base * factor[column]`` — ``cost._factor_term`` with the flop
+    time folded in."""
+    name, scale = _factor_term(cfg, length)
+    return name, float(fft_flops(rows, length)) / nominal_flops * scale
+
+
+def fit_cost_params(store: str | dict, *, backend: str | None = None,
+                    min_entries: int = 8) -> CostParams:
+    """Least-squares ``CostParams`` from a wisdom store's measured entries.
+
+    ``store`` is a wisdom file path or the entries dict ``load_wisdom``
+    returns.  Only entries measured on ``backend`` (default: the current
+    jax backend) contribute.  Returns the fitted params, or the
+    hard-coded ``CostParams.for_backend(backend)`` when fewer than
+    ``min_entries`` measured entries exist; degenerate components fall
+    back individually.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    cache_key = None
+    if isinstance(store, str):
+        try:
+            mtime = os.stat(store).st_mtime_ns
+        except OSError:
+            mtime = None
+        cache_key = (os.path.abspath(store), mtime, backend, min_entries)
+        if cache_key in _FIT_CACHE:
+            return _FIT_CACHE[cache_key]
+        entries = load_wisdom(store)
+    else:
+        entries = store
+    defaults = CostParams.for_backend(backend)
+
+    A_rows, b_rows = [], []
+    for key, entry in entries.items():
+        if not isinstance(entry, dict) or "time_s" not in entry:
+            continue
+        fields = _parse_key(key)
+        if fields.get("backend") != backend:
+            continue
+        try:
+            n, p = int(fields["n"]), int(fields["p"])
+            segs, dispatches, fused = _entry_structure(entry, n, p)
+        except (KeyError, TypeError, ValueError):
+            continue  # schema drift is never an error, just not a sample
+        if not segs:
+            continue
+        traffic = 0.0 if fused else (
+            2.0 * n * n * _COMPLEX64_BYTES / defaults.hbm_bytes_per_s)
+        b = float(entry["time_s"]) / 2.0 - traffic
+        # Makespan-dominant segment: largest *modeled* time under the
+        # default factors (a tiny interpret-mode pallas segment can
+        # dominate a large xla one, so raw flop-time would credit the
+        # measured seconds to the wrong backend column).  Mixed schedules
+        # attribute the whole makespan to that segment's backend — an
+        # approximation, exact for homogeneous entries.
+        def modeled(cb):
+            col, base = cb
+            factor = (defaults.fused_factor if col == "fused"
+                      else defaults.backend_factor[col])
+            return base * factor
+        col, base = max(
+            (_factor_feature(rows, length, cfg, defaults.nominal_flops)
+             for rows, length, cfg in segs),
+            key=modeled)
+        row = np.zeros(len(_COLS))
+        row[0] = dispatches
+        row[_COLS.index(col)] = base
+        A_rows.append(row)
+        b_rows.append(b)
+
+    fitted = defaults
+    if len(b_rows) >= min_entries:
+        A = np.asarray(A_rows)
+        b = np.asarray(b_rows)
+        try:
+            x, *_ = np.linalg.lstsq(A, b, rcond=None)
+        except np.linalg.LinAlgError:
+            x = None
+        if x is not None:
+            c_d = float(x[0]) if x[0] > 0 else defaults.dispatch_overhead_s
+            factors = dict(defaults.backend_factor)
+            for name in ("xla", "stockham", "pallas"):
+                j = _COLS.index(name)
+                if np.any(A[:, j] > 0) and x[j] > 0:
+                    factors[name] = float(x[j])
+            j = _COLS.index("fused")
+            fused_factor = (float(x[j]) if np.any(A[:, j] > 0) and x[j] > 0
+                            else defaults.fused_factor)
+            fitted = dataclasses.replace(defaults, dispatch_overhead_s=c_d,
+                                         backend_factor=factors,
+                                         fused_factor=fused_factor)
+    if cache_key is not None:
+        if len(_FIT_CACHE) > 64:
+            _FIT_CACHE.clear()
+        _FIT_CACHE[cache_key] = fitted
+    return fitted

@@ -32,10 +32,15 @@ import numpy as np
 
 from repro.core.fpm import FPMSet, fft_flops
 from repro.plan.config import PlanConfig
+from repro.plan.schedule import SegmentSchedule
 
-__all__ = ["CostParams", "estimate_cost", "phase_dispatch_count"]
+__all__ = ["CostParams", "estimate_cost", "estimate_schedule_cost",
+           "phase_dispatch_count"]
 
 _COMPLEX64_BYTES = 8
+# Bluestein computes one N-point DFT as ~3 length-m FFTs (forward, kernel
+# forward is precomputable but the conv needs fwd+inv) + pointwise chirps.
+_CZT_FFT_FACTOR = 3.0
 
 
 def _is_pow2(n: int) -> bool:
@@ -110,23 +115,40 @@ def phase_dispatch_count(config: PlanConfig, n: int, d, pad_lengths) -> int:
     return max(int((np.asarray(d) > 0).sum()), 1)
 
 
-def _compute_multiplier(config: PlanConfig, length: int,
-                        params: CostParams) -> float:
-    """Per-segment compute multiplier; kernel backends need pow2 lengths
-    (``fft_rows`` falls back to XLA otherwise, and the model mirrors that)."""
+def _factor_term(config: PlanConfig, length: int) -> tuple[str, float]:
+    """(factor name, scale) with the backend factor left symbolic: the
+    modelled multiplier is ``scale * factor[name]`` (``fused_factor`` for
+    name 'fused').  The one home of the fallback/branch logic — both the
+    estimate model and the calibration fit (``plan/calibrate.py``) build
+    on it, so they can never drift apart."""
     if config.fused:
-        return params.fused_factor
+        return "fused", 1.0
+    if config.pad == "czt":
+        # The exact Bluestein path runs ~3 library FFTs at the padded
+        # length per transform (czt_dft), whatever the radix says.
+        return "xla", _CZT_FFT_FACTOR
     backend = config.fft_backend
     if backend != "xla" and not _is_pow2(length):
-        return params.backend_factor["xla"]
-    mult = params.backend_factor[backend]
+        # Kernel backends need pow2 lengths (fft_rows falls back to XLA
+        # otherwise, and the model mirrors that).
+        return "xla", 1.0
     if backend == "pallas":
         # Radix sets the Stockham pass count: radix 4 makes ceil(log2 n / 2)
         # trips over the data instead of log2 n.
         from repro.kernels.fft.kernel import stockham_stage_count
         log2n = max(int(np.log2(length)), 1)
-        mult *= stockham_stage_count(length, config.radix or 4) / log2n * 2.0
-    return mult
+        return "pallas", stockham_stage_count(length, config.radix or 4) \
+            / log2n * 2.0
+    return backend, 1.0
+
+
+def _compute_multiplier(config: PlanConfig, length: int,
+                        params: CostParams) -> float:
+    """Per-segment compute multiplier under ``params`` (see _factor_term)."""
+    name, scale = _factor_term(config, length)
+    factor = (params.fused_factor if name == "fused"
+              else params.backend_factor[name])
+    return factor * scale
 
 
 def estimate_cost(config: PlanConfig, *, n: int, d=None, pad_lengths=None,
@@ -139,37 +161,56 @@ def estimate_cost(config: PlanConfig, *, n: int, d=None, pad_lengths=None,
     segment); ``fpms`` supplies measured per-processor times when available;
     ``comm_bytes`` is the per-phase all_to_all volume of the distributed
     pipeline (0 single-host).
+
+    Delegates to ``estimate_schedule_cost`` of the degenerate
+    every-segment-alike schedule — one copy of the phase formula, so the
+    tuner's hetero-vs-homo comparison is unbiased by construction.
+    """
+    schedule = SegmentSchedule.homogeneous(
+        config, n, d, pad_lengths if d is not None else None)
+    return estimate_schedule_cost(schedule, fpms=fpms, params=params,
+                                  comm_bytes=comm_bytes)
+
+
+def estimate_schedule_cost(schedule: SegmentSchedule, *,
+                           fpms: FPMSet | None = None,
+                           params: CostParams | None = None,
+                           comm_bytes: float = 0.0) -> float:
+    """Predicted seconds for a full 2-D PFFT under a (possibly
+    heterogeneous) schedule: two limb phases, each costing
+
+        makespan + HBM traffic + dispatches * overhead  (+ overlapped comm)
+
+    Each segment is priced with *its own* entry's config (its FPM
+    ``time_at`` times that config's backend multiplier via
+    ``_factor_term``); the makespan is their max (abstract processors run
+    concurrently — paper semantics); the dispatch count is the number of
+    ``(length, config)`` groups; fused schedules never materialise the
+    intermediate matrix; ``pipeline_panels=k`` overlaps the comm term at
+    (k-1) extra dispatches.  ``estimate_cost`` is the degenerate
+    homogeneous view of this same formula.
     """
     if params is None:
         params = CostParams.for_backend()
+    n = schedule.n
 
-    segments = _segment_work(n, d, pad_lengths)
-
-    # Compute: abstract processors run their segments concurrently (paper
-    # semantics), so a phase costs its makespan.
-    def seg_time(i: int, rows: int, length: int) -> float:
+    def seg_time(e) -> float:
         if fpms is not None:
-            t = fpms[i].time_at(rows, length)
+            t = fpms[e.index].time_at(e.rows, e.length)
         else:
-            t = float(fft_flops(rows, length)) / params.nominal_flops
-        return t * _compute_multiplier(config, length, params)
+            t = float(fft_flops(e.rows, e.length)) / params.nominal_flops
+        return t * _compute_multiplier(e.config, e.length, params)
 
-    idx = [i for i, rows in enumerate(np.asarray(d))
-           if rows > 0] if d is not None else [0]
-    makespan = max((seg_time(i, rows, length)
-                    for i, (rows, length) in zip(idx, segments)), default=0.0)
+    makespan = max((seg_time(e) for e in schedule.entries), default=0.0)
 
-    # Memory: the unfused phase writes the row-transformed matrix to HBM and
-    # streams it back for the transpose; fused never materialises it.
-    traffic = 0.0 if config.fused else (
+    common = schedule.common_config
+    fused = common is not None and common.fused
+    traffic = 0.0 if fused else (
         2.0 * n * n * _COMPLEX64_BYTES / params.hbm_bytes_per_s)
-
-    dispatches = phase_dispatch_count(config, n, d, pad_lengths)
+    dispatches = 1 if fused else max(len(schedule.batch_groups()), 1)
     phase = makespan + traffic + dispatches * params.dispatch_overhead_s
 
-    # Communication: pipeline_panels=k overlaps panel i's exchange with
-    # panel i+1's FFT; each extra panel also costs a dispatch.
-    k = config.pipeline_panels
+    k = max(e.config.pipeline_panels for e in schedule.entries)
     comm = comm_bytes / params.hbm_bytes_per_s
     if k > 1:
         comm *= 1.0 - params.panel_overlap * (k - 1) / k

@@ -25,9 +25,12 @@ import numpy as np
 
 from repro.core.fpm import FPMSet
 from repro.plan.config import PlanConfig
-from repro.plan.cost import CostParams, _segment_work, estimate_cost
+from repro.plan.cost import (CostParams, _compute_multiplier, _segment_work,
+                             estimate_cost, estimate_schedule_cost)
+from repro.plan.schedule import SegmentSchedule
 
-__all__ = ["candidate_configs", "measure_configs", "tune_config"]
+__all__ = ["candidate_configs", "segment_candidate_configs",
+           "measure_configs", "tune_config", "tune_schedule"]
 
 
 def _is_pow2(n: int) -> bool:
@@ -40,11 +43,13 @@ def candidate_configs(n: int, *, pad: str = "none", d=None,
 
     ``pad`` is fixed by the method (it is semantics, not a tunable);
     ``fused`` requires a power-of-two N and no per-segment padding;
-    the kernel radices require a power-of-two N; ``batched`` only
-    matters when the partition has more than one non-empty segment.
+    the kernel radices require a power-of-two N (and the czt path runs
+    library FFTs inside ``czt_dft`` whatever the radix says, so czt
+    enumerates only the dispatch structure); ``batched`` only matters
+    when the partition has more than one non-empty segment.
     """
     radices: list[int | None] = [None]
-    if _is_pow2(n):
+    if pad != "czt" and _is_pow2(n):
         radices += [2, 4]
     multi_segment = d is None or int((np.asarray(d) > 0).sum()) > 1
     batch_opts = (True, False) if multi_segment else (True,)
@@ -62,9 +67,62 @@ def candidate_configs(n: int, *, pad: str = "none", d=None,
     return out
 
 
-def measure_configs(configs: Sequence[PlanConfig], n: int, *, d=None,
-                    pad_lengths=None, dtype=np.complex64,
-                    rounds: int = 3) -> dict[PlanConfig, float]:
+def segment_candidate_configs(length: int, *, pad: str = "none"
+                              ) -> list[PlanConfig]:
+    """Per-segment variants for one effective FFT length.
+
+    A segment entry tunes only what is segment-local: the row-FFT backend
+    (``radix``).  Phase-global knobs stay out of the per-segment space —
+    ``fused`` collapses the whole matrix into one dispatch, ``batched``
+    and ``pipeline_panels`` shape the phase, and they are all covered by
+    the homogeneous envelope ``tune_schedule`` compares against.  The czt
+    path has a single per-segment shape (``czt_dft`` at the entry's
+    length), so it contributes exactly one candidate.
+    """
+    if pad == "czt":
+        return [PlanConfig(pad="czt")]
+    radices: list[int | None] = [None]
+    if _is_pow2(length):
+        radices += [2, 4]
+    return [PlanConfig(radix=r, pad=pad) for r in radices]
+
+
+def _length_backend(cfg: PlanConfig, length: int) -> tuple[str, int | None]:
+    """Effective (backend, radix) for one length: kernel backends fall
+    back to XLA on non-pow2 lengths (``fft_rows``); the one home of that
+    rule for behavior keys and Pareto dedup."""
+    kw = cfg.row_fft_kwargs()
+    if kw["backend"] != "xla" and not _is_pow2(length):
+        return "xla", None
+    return kw["backend"], kw["radix"]
+
+
+def _timed_min(pairs, x, rounds: int) -> dict:
+    """{item: best seconds} over ``rounds`` shuffled-interleaved episodes.
+
+    The shared timing discipline of every measure harness here: an
+    untimed same-fn warm run before each timed one (evict the shuffled
+    neighbour's allocator/cache state), per-item min across rounds.
+    ``pairs``: [(item, compiled fn)].
+    """
+    import jax
+
+    rng = np.random.default_rng(1)
+    times = {item: float("inf") for item, _ in pairs}
+    for _ in range(max(rounds, 1)):
+        for i in rng.permutation(len(pairs)):
+            item, fn = pairs[int(i)]
+            jax.block_until_ready(fn(x))  # warm: evict neighbour's state
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            times[item] = min(times[item], time.perf_counter() - t0)
+    return times
+
+
+def measure_configs(configs: Sequence[PlanConfig | SegmentSchedule], n: int,
+                    *, d=None, pad_lengths=None, dtype=np.complex64,
+                    rounds: int = 3
+                    ) -> dict[PlanConfig | SegmentSchedule, float]:
     """On-device seconds of the jitted limb per config: {config: best_s}.
 
     Interleaved in a per-round *shuffled* order, per-config min over
@@ -78,7 +136,9 @@ def measure_configs(configs: Sequence[PlanConfig], n: int, *, d=None,
     measure-mode tuning and the planner microbenchmark.
 
     ``d=None`` means one whole-matrix segment (the cost model's
-    convention).
+    convention).  Items may be ``PlanConfig``s *or* ``SegmentSchedule``s
+    (both hashable) — ``tune_schedule``'s measure mode races assembled
+    heterogeneous schedules against homogeneous configs in one pot.
     """
     import jax
     import jax.numpy as jnp
@@ -89,21 +149,15 @@ def measure_configs(configs: Sequence[PlanConfig], n: int, *, d=None,
     x = jnp.asarray((rng.standard_normal((n, n))
                      + 1j * rng.standard_normal((n, n))).astype(dtype))
     pairs = []
-    for cfg in configs:
-        fn = jax.jit(lambda m, c=cfg: _pfft_limb(m, d_eff,
-                                                 pad_lengths=pad_lengths,
-                                                 config=c))
+    for item in configs:
+        if isinstance(item, SegmentSchedule):
+            kw = {"schedule": item}
+        else:
+            kw = {"pad_lengths": pad_lengths, "config": item}
+        fn = jax.jit(lambda m, kw=kw: _pfft_limb(m, d_eff, **kw))
         jax.block_until_ready(fn(x))  # compile
-        pairs.append((cfg, fn))
-    times = {cfg: float("inf") for cfg, _ in pairs}
-    for _ in range(max(rounds, 1)):
-        for i in rng.permutation(len(pairs)):
-            cfg, fn = pairs[int(i)]
-            jax.block_until_ready(fn(x))  # warm: evict neighbour's state
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(x))
-            times[cfg] = min(times[cfg], time.perf_counter() - t0)
-    return times
+        pairs.append((item, fn))
+    return _timed_min(pairs, x, rounds)
 
 
 def _behavior_key(cfg: PlanConfig, n: int, d, pad_lengths) -> tuple:
@@ -117,12 +171,7 @@ def _behavior_key(cfg: PlanConfig, n: int, d, pad_lengths) -> tuple:
     lengths = sorted({length for _, length in _segment_work(n, d, pad_lengths)})
     if cfg.fused:
         return ("fused", tuple(lengths))
-    per_len = []
-    for length in lengths:
-        kw = cfg.row_fft_kwargs()
-        if kw["backend"] != "xla" and (length & (length - 1)):
-            kw = {"backend": "xla", "radix": None}
-        per_len.append((length, kw["backend"], kw["radix"]))
+    per_len = [(length,) + _length_backend(cfg, length) for length in lengths]
     return (cfg.batched, cfg.pipeline_panels, tuple(per_len))
 
 
@@ -179,4 +228,176 @@ def tune_config(n: int, *, d=None, pad_lengths=None, fpms: FPMSet | None = None,
     winner = min(measured, key=measured.get)
     info["measured"] = [(cfg.to_dict(), float(t)) for cfg, t in measured.items()]
     info["time_s"] = float(measured[winner])
+    return winner, info
+
+
+def _measure_length_group(configs: Sequence[PlanConfig], rows: int,
+                          length: int, n: int, dtype, rounds: int
+                          ) -> dict[PlanConfig, float]:
+    """On-device seconds of one dispatch group's row-FFT program per config.
+
+    The program is exactly what the schedule executor runs for a
+    ``(length, config)`` group: gather ``rows`` rows of the N-wide
+    matrix, pad to ``length`` (or chirp-Z at it), transform, crop.  Same
+    shuffled-interleaved-min discipline as ``measure_configs``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((rows, n))
+                     + 1j * rng.standard_normal((rows, n))).astype(dtype))
+
+    def group_fn(cfg: PlanConfig):
+        if cfg.pad == "czt":
+            from repro.core.pfft import czt_dft
+            return lambda m: czt_dft(m, length)
+        from repro.fft.fft2d import fft_rows
+        kw = cfg.row_fft_kwargs()
+        if length > n:
+            return lambda m: fft_rows(
+                jnp.pad(m, ((0, 0), (0, length - n))), **kw)[:, :n]
+        return lambda m: fft_rows(m, **kw)
+
+    pairs = []
+    for cfg in configs:
+        fn = jax.jit(group_fn(cfg))
+        jax.block_until_ready(fn(x))  # compile
+        pairs.append((cfg, fn))
+    return _timed_min(pairs, x, rounds)
+
+
+def tune_schedule(n: int, *, d=None, pad_lengths=None,
+                  fpms: FPMSet | None = None, mode: str = "estimate",
+                  pad: str = "none", params: CostParams | None = None,
+                  top_k: int = 3, panels: Sequence[int] = (1,),
+                  comm_bytes: float = 0.0, dtype=np.complex64, reps: int = 3
+                  ) -> tuple[SegmentSchedule, dict]:
+    """Pick the best per-segment execution schedule; returns (schedule, info).
+
+    The heterogeneous generalisation of ``tune_config``: candidate
+    configs are priced *per distinct effective FFT length*, each segment
+    with its own FPM ``time_at``, so a slow processor can keep the
+    library FFT while pow2-padded fast processors take the kernel in the
+    same phase.
+
+    * Single-length problems are exactly the PR-2 homogeneous problem and
+      delegate to ``tune_config`` (whose candidate space also covers
+      ``fused``/``batched=False``/``pipeline_panels``).
+    * Otherwise, estimate mode picks the per-group argmin under the
+      makespan objective, then keeps the heterogeneous schedule only if
+      it beats the best *homogeneous* config's estimate (dispatch counts
+      included) — the makespan can only improve, but extra dispatch
+      groups are not free.
+    * Measure mode times only the Pareto top-``top_k`` candidates per
+      length group (distinct behaviors, cheapest-estimate first), then
+      races the assembled schedule against the homogeneous winner end to
+      end; ``info["time_s"]`` is the winner's limb time.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    if d is not None:
+        d = np.asarray(d)
+    if params is None:
+        params = CostParams.for_backend()
+
+    # (processor index, rows, effective length) of each non-empty segment.
+    idx = [i for i, rows in enumerate(np.asarray(d))
+           if rows > 0] if d is not None else [0]
+    segments = [(i, rows, length) for i, (rows, length)
+                in zip(idx, _segment_work(n, d, pad_lengths))]
+    groups: dict[int, list[tuple[int, int]]] = {}
+    for i, rows, length in segments:
+        groups.setdefault(length, []).append((i, rows))
+
+    if len(groups) <= 1:
+        cfg, info = tune_config(n, d=d, pad_lengths=pad_lengths, fpms=fpms,
+                                mode=mode, pad=pad, params=params,
+                                top_k=top_k, panels=panels,
+                                comm_bytes=comm_bytes, dtype=dtype, reps=reps)
+        schedule = SegmentSchedule.homogeneous(cfg, n, d, pad_lengths)
+        info["chosen"] = "homogeneous"
+        info["schedule"] = schedule.to_dict()
+        return schedule, info
+
+    if mode == "measure" and comm_bytes:
+        raise NotImplementedError(
+            "measure mode times the single-host limb; distributed configs "
+            "are estimate-only for now (ROADMAP open item)")
+
+    def group_time(cfg: PlanConfig, members, length: int) -> float:
+        """Estimated makespan contribution of one length group under cfg."""
+        def seg_t(i: int, rows: int) -> float:
+            if fpms is not None:
+                t = fpms[i].time_at(rows, length)
+            else:
+                from repro.core.fpm import fft_flops
+                t = float(fft_flops(rows, length)) / params.nominal_flops
+            return t * _compute_multiplier(cfg, length, params)
+        return max(seg_t(i, rows) for i, rows in members)
+
+    info: dict = {"mode": mode, "groups": {}}
+    picks: dict[int, PlanConfig] = {}
+    for length, members in groups.items():
+        cands = segment_candidate_configs(length, pad=pad)
+        ranked = sorted(((cfg, group_time(cfg, members, length))
+                         for cfg in cands), key=lambda kv: kv[1])
+        info["groups"][str(length)] = [(c.to_dict(), float(t))
+                                       for c, t in ranked]
+        if mode == "estimate":
+            picks[length] = ranked[0][0]
+            continue
+        # Pareto finalists: one per distinct program (pow2 fallbacks erase
+        # radix differences), cheapest-estimate first, at most top_k.
+        finalists, seen = [], set()
+        for cfg, _ in ranked:
+            key = (cfg.pad,) + _length_backend(cfg, length)
+            if key not in seen:
+                seen.add(key)
+                finalists.append(cfg)
+            if len(finalists) >= max(top_k, 1):
+                break
+        measured = _measure_length_group(
+            finalists, rows=sum(r for _, r in members), length=length,
+            n=n, dtype=dtype, rounds=reps)
+        picks[length] = min(measured, key=measured.get)
+        info.setdefault("group_measured", {})[str(length)] = [
+            (c.to_dict(), float(t)) for c, t in measured.items()]
+
+    p = len(d) if d is not None else 1
+    default = PlanConfig(pad=pad)
+    # Per-processor config: its length group's pick (idle processors get
+    # the default; they have no schedule entry anyway).
+    eff = {i: length for i, _, length in segments}
+    cfg_list = [picks.get(eff.get(i, n), default) for i in range(p)]
+    hetero = SegmentSchedule.from_parts(n, d, pad_lengths, cfg_list)
+    est_hetero = estimate_schedule_cost(hetero, fpms=fpms, params=params,
+                                        comm_bytes=comm_bytes)
+
+    # Homogeneous envelope: the full PR-2 candidate space under one config.
+    homo_ranked = sorted(
+        ((cfg, estimate_cost(cfg, n=n, d=d, pad_lengths=pad_lengths,
+                             fpms=fpms, params=params, comm_bytes=comm_bytes))
+         for cfg in candidate_configs(n, pad=pad, d=d, panels=panels)),
+        key=lambda kv: kv[1])
+    homo_cfg, est_homo = homo_ranked[0]
+    homo = SegmentSchedule.homogeneous(homo_cfg, n, d, pad_lengths)
+    info["ranked"] = [(c.to_dict(), float(t)) for c, t in homo_ranked]
+    info["heterogeneous"] = {"schedule": hetero.to_dict(),
+                             "est_s": float(est_hetero)}
+    info["homogeneous"] = {"config": homo_cfg.to_dict(),
+                           "est_s": float(est_homo)}
+
+    if mode == "estimate":
+        winner = homo if est_homo < est_hetero else hetero
+    else:
+        raced = measure_configs([hetero, homo], n, d=d,
+                                pad_lengths=pad_lengths, dtype=dtype,
+                                rounds=reps)
+        winner = min(raced, key=raced.get)
+        info["measured"] = [(s.describe(), float(t)) for s, t in raced.items()]
+        info["time_s"] = float(raced[winner])
+    info["chosen"] = ("heterogeneous" if len(winner.configs) > 1
+                      else "homogeneous")
+    info["schedule"] = winner.to_dict()
     return winner, info

@@ -4,11 +4,17 @@ A wisdom file is a small versioned JSON document mapping a plan key
 
     n=<N>|dtype=<dtype>|p=<p>|method=<method>|backend=<backend>
 
-to the ``PlanConfig`` a previous tuning run chose (plus how it was chosen
-and the measured time, when there is one).  ``plan_pfft(tune=...,
-wisdom=path)`` consults it before tuning, so a process that measured once
-warms every later session — the serving story the ROADMAP needs: plans
-for hot sizes are selected once and then served from disk.
+to the plan a previous tuning run chose (plus how it was chosen and the
+measured time, when there is one).  ``plan_pfft(tune=..., wisdom=path)``
+consults it before tuning, so a process that measured once warms every
+later session — the serving story the ROADMAP needs: plans for hot sizes
+are selected once and then served from disk.
+
+Since schema v2 an entry's value is either a single ``PlanConfig``
+(``"config"``, the degenerate case — e.g. microbenchmark sweeps) or a
+full heterogeneous ``SegmentSchedule`` (``"schedule"``), so a tuner that
+once picked per-segment variants serves the exact mix back.  v1 stores
+predate schedules and are treated as whole-file misses.
 
 Writes are atomic (write a sibling ``.tmp``, then ``os.replace`` — the
 same idiom as ``save_fpms``) so concurrent readers never observe a torn
@@ -21,18 +27,23 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
+
+import numpy as np
 
 from repro.plan.config import PlanConfig
+from repro.plan.schedule import SegmentSchedule
 
 __all__ = [
     "WISDOM_VERSION",
     "wisdom_key",
+    "partition_digest",
     "load_wisdom",
     "lookup_wisdom",
     "record_wisdom",
 ]
 
-WISDOM_VERSION = 1
+WISDOM_VERSION = 2
 
 
 def wisdom_key(*, n: int, dtype: str, p: int, method: str, backend: str,
@@ -49,6 +60,20 @@ def wisdom_key(*, n: int, dtype: str, p: int, method: str, backend: str,
     return base if detail is None else f"{base}|part={detail}"
 
 
+def partition_digest(d, pad_lengths=None) -> str:
+    """The ``detail`` digest of an FPM partition (+ pad lengths).
+
+    Shared by ``plan_pfft`` and the microbenchmark's wisdom warmer so
+    both sides key FPM-method entries identically — a different
+    FPMSet/eps gives a different partition, which must not be served
+    another model's plan.
+    """
+    raw = np.asarray(d, dtype=np.int64).tobytes()
+    if pad_lengths is not None:
+        raw += np.asarray(pad_lengths, dtype=np.int64).tobytes()
+    return format(zlib.crc32(raw), "08x")
+
+
 def load_wisdom(path: str) -> dict:
     """Entries of a wisdom file; {} on missing, corrupt, or version-mismatched
     files (all are cache misses, never errors)."""
@@ -63,19 +88,28 @@ def load_wisdom(path: str) -> dict:
     return entries if isinstance(entries, dict) else {}
 
 
-def lookup_wisdom(path: str, key: str) -> tuple[PlanConfig, dict] | None:
-    """(config, full entry) for ``key``, or None on any kind of miss."""
+def lookup_wisdom(path: str, key: str
+                  ) -> tuple[PlanConfig | SegmentSchedule, dict] | None:
+    """(plan, full entry) for ``key``, or None on any kind of miss.
+
+    The plan is a ``SegmentSchedule`` when the entry persisted one, else
+    the single ``PlanConfig`` — callers (``plan_pfft``) lift a bare
+    config into the degenerate schedule for the current partition.
+    """
     entry = load_wisdom(path).get(key)
     if not isinstance(entry, dict):
         return None
     try:
+        if "schedule" in entry:
+            return SegmentSchedule.from_dict(entry["schedule"]), entry
         return PlanConfig.from_dict(entry["config"]), entry
     except (KeyError, TypeError, ValueError):
         return None  # schema drift inside an entry is also just a miss
 
 
-def record_wisdom(path: str, key: str, config: PlanConfig, *, mode: str,
-                  time_s: float | None = None, extra: dict | None = None) -> None:
+def record_wisdom(path: str, key: str, config: PlanConfig | SegmentSchedule,
+                  *, mode: str, time_s: float | None = None,
+                  extra: dict | None = None) -> None:
     """Insert/overwrite one entry, atomically rewriting the store.
 
     The load-modify-replace cycle holds an exclusive flock on a ``.lock``
@@ -92,7 +126,10 @@ def record_wisdom(path: str, key: str, config: PlanConfig, *, mode: str,
         pass
     try:
         entries = load_wisdom(path)
-        entry: dict = {"config": config.to_dict(), "mode": mode}
+        if isinstance(config, SegmentSchedule):
+            entry: dict = {"schedule": config.to_dict(), "mode": mode}
+        else:
+            entry = {"config": config.to_dict(), "mode": mode}
         if time_s is not None:
             entry["time_s"] = float(time_s)
         if extra:

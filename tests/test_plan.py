@@ -366,14 +366,20 @@ def test_plan_execute_shape_error_names_planned_size():
         plan.execute(jnp.ones((n,), jnp.complex64))
 
 
-def test_plan_execute_czt_rejects_batch():
+def test_plan_execute_czt_accepts_batch():
+    """Batched czt execute used to be rejected with a named error; since
+    the schedule executor took over the per-segment slicing it vmaps
+    like every other method (satellite acceptance)."""
     n = 16
     plan = plan_pfft(n, fpms=fpms_for(n), method="fpm-czt")
     m = random_signal(n)
     np.testing.assert_allclose(np.asarray(plan.execute(m)),
                                np.asarray(jnp.fft.fft2(m)), atol=2e-2)
-    with pytest.raises(ValueError, match="fpm-czt"):
-        plan.execute(jnp.stack([m, m]))
+    batch = jnp.stack([m, 2.0 * m])
+    out = plan.execute(batch)
+    assert out.shape == (2, n, n)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.fft.fft2(batch)), atol=4e-2)
 
 
 # -------------------------------------------------------------- shim hygiene
