@@ -23,6 +23,15 @@ acceptance checks assert on):
                the makespan-estimate delta, and the measured limb times
                of both (hetero schedule wisdom is recorded under the
                same key ``plan_pfft`` would look up).
+  dist         distributed measure tuning on a mesh over every visible
+               device: ``tune_dist_config`` races finalists through the
+               full ``pfft2_distributed`` pipeline and the record carries
+               the *measured-vs-estimated comm delta* (the number the
+               cost model's interconnect constants are judged — and
+               calibrated — by).  On a 1-device host the sweep records
+               the estimate-fallback facts; run under
+               ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+               (the CI dist job does) for a real comm sample.
 
 ``--wisdom W`` writes each benched size's best *measured* config into the
 wisdom store ``W`` (keyed exactly as ``plan_pfft`` keys its lookups), so a
@@ -54,9 +63,11 @@ from repro.kernels.fft.ops import fft_rows_op
 from repro.kernels.fused.ops import fft_rows_transpose_op
 from repro.kernels.transpose.ops import transpose_op
 from repro.plan import (CostParams, PlanConfig, candidate_configs,
-                        estimate_cost, estimate_schedule_cost,
-                        measure_configs, partition_digest, record_wisdom,
-                        tune_config, tune_schedule, wisdom_key)
+                        dist_comm_bytes, dist_panel_space, estimate_cost,
+                        estimate_schedule_cost, measure_configs,
+                        partition_digest, record_wisdom, topology_digest,
+                        tune_config, tune_dist_config, tune_schedule,
+                        wisdom_key)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
@@ -248,18 +259,90 @@ def bench_schedule(n: int, p: int, wisdom_path: str | None = None
     return [rec]
 
 
+def bench_dist(sizes, wisdom_path: str | None = None) -> list[dict]:
+    """Distributed measure tuning over every visible device.
+
+    For each size, ``tune_dist_config(mode="measure")`` races the top
+    finalists through the full ``pfft2_distributed`` pipeline (both
+    all_to_all phases) on a 1-D mesh over all local devices, and the
+    record pins the measured-vs-estimated comm delta — the evidence the
+    interconnect constants are calibrated from.  Wisdom entries land
+    under the same per-topology v3 key ``plan_pfft(mesh=...)`` looks up,
+    comm sample included, so a benchmark run warms distributed planning
+    exactly like it warms the single-host kinds.
+    """
+    import jax
+    from repro.launch.mesh import make_fft_mesh
+
+    p = jax.device_count()
+    mesh = make_fft_mesh(p)
+    backend = jax.default_backend()
+    recs = []
+    for n in sizes:
+        if n % p:
+            continue
+        panels = dist_panel_space(n, p)
+        cfg, info = tune_dist_config(n, mesh, "fft", mode="measure",
+                                     panels=panels)
+        dist = info["dist"]
+        measured = "measure_fallback" not in info
+        rec = {
+            "bench": "dist", "n": int(n), "devices": p,
+            "topology": topology_digest(mesh, "fft", panels=panels),
+            "config": cfg.describe(),
+            "comm_bytes": dist["comm_bytes"],
+            "comm_time_est_s": dist["comm_time_est_s"],
+            "measured": measured,
+        }
+        if measured:
+            rec.update({
+                "time_s": info["time_s"],
+                "local_phase_s": dist["local_phase_s"],
+                "comm_time_meas_s": dist["comm_time_meas_s"],
+                "comm_delta_s": dist["comm_time_meas_s"]
+                - dist["comm_time_est_s"],
+            })
+        else:
+            rec["fallback"] = info["measure_fallback"]
+        recs.append(rec)
+        if wisdom_path and measured:
+            key = wisdom_key(n=n, dtype="complex64", p=p, method="lb",
+                             backend=backend, topology=rec["topology"])
+            record_wisdom(wisdom_path, key, cfg, mode="measure",
+                          time_s=info["time_s"],
+                          extra={"origin": "kernel_microbench",
+                                 "topology": rec["topology"],
+                                 "comm_bytes": dist["comm_bytes"],
+                                 "comm_time_s": dist["comm_time_meas_s"]})
+    return recs
+
+
 def run(quick: bool = False, out: str = DEFAULT_OUT,
-        wisdom: str | None = None) -> dict:
+        wisdom: str | None = None, sweeps: str | None = None) -> dict:
     radix_sizes = [64, 256] if quick else [64, 256, 1024]
     fused_sizes = [64, 128] if quick else [64, 128, 256]
     planner_sizes = [128] if quick else [128, 256]
-    records = (bench_radix(radix_sizes, rows=32 if quick else 64)
-               + bench_fused(fused_sizes)
-               + bench_segments(n=128 if quick else 256, p=4,
-                                pad_to=160 if quick else 320)
-               + bench_planner(planner_sizes, p=4, wisdom_path=wisdom)
-               + bench_schedule(n=48 if quick else 96, p=4,
-                                wisdom_path=wisdom))
+    all_sweeps = {
+        "radix": lambda: bench_radix(radix_sizes, rows=32 if quick else 64),
+        "fused": lambda: bench_fused(fused_sizes),
+        "segments": lambda: bench_segments(n=128 if quick else 256, p=4,
+                                           pad_to=160 if quick else 320),
+        "planner": lambda: bench_planner(planner_sizes, p=4,
+                                         wisdom_path=wisdom),
+        "schedule": lambda: bench_schedule(n=48 if quick else 96, p=4,
+                                           wisdom_path=wisdom),
+        "dist": lambda: bench_dist([64] if quick else [64, 128],
+                                   wisdom_path=wisdom),
+    }
+    chosen = (list(all_sweeps) if sweeps is None
+              else [s.strip() for s in sweeps.split(",") if s.strip()])
+    unknown = set(chosen) - set(all_sweeps)
+    if unknown:
+        raise SystemExit(f"unknown sweeps {sorted(unknown)}; "
+                         f"choose from {sorted(all_sweeps)}")
+    records = []
+    for name in chosen:
+        records += all_sweeps[name]()
     import jax
     payload = {
         "backend": jax.default_backend(),
@@ -283,8 +366,13 @@ def main() -> int:
     ap.add_argument("--wisdom", default=None,
                     help="wisdom store to warm with each size's best "
                          "measured config (plan_pfft-compatible keys)")
+    ap.add_argument("--sweeps", default=None,
+                    help="comma-separated subset of "
+                         "radix,fused,segments,planner,schedule,dist "
+                         "(default: all)")
     args = ap.parse_args()
-    run(quick=args.quick, out=args.out, wisdom=args.wisdom)
+    run(quick=args.quick, out=args.out, wisdom=args.wisdom,
+        sweeps=args.sweeps)
     return 0
 
 

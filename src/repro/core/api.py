@@ -45,9 +45,9 @@ from repro.core.pfft import _pfft_limb
 from repro.plan.calibrate import fit_cost_params
 from repro.plan.config import PlanConfig
 from repro.plan.schedule import SegmentSchedule
-from repro.plan.tune import tune_schedule
+from repro.plan.tune import dist_panel_space, tune_dist_schedule, tune_schedule
 from repro.plan.wisdom import (lookup_wisdom, partition_digest, record_wisdom,
-                               wisdom_key)
+                               topology_digest, wisdom_key)
 
 Method = Literal["lb", "fpm", "fpm-pad", "fpm-czt"]
 TuneMode = Literal["off", "estimate", "measure"]
@@ -103,7 +103,8 @@ class PfftPlan:
 def _resolve_schedule(n: int, method: Method, part: PartitionResult,
                       pads: np.ndarray | None, fpms: FPMSet | None,
                       tune: TuneMode, wisdom: str | None,
-                      config: PlanConfig | None, dtype: str
+                      config: PlanConfig | None, dtype: str,
+                      mesh=None, axis_name: str = "fft"
                       ) -> tuple[SegmentSchedule, dict[str, Any]]:
     """Pick the plan's execution schedule and say where it came from.
 
@@ -114,6 +115,14 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
     the current partition (a stale structure is a miss, never an error).
     ``tuning["source"]`` records which branch won — the CI smoke test
     asserts a warm wisdom file yields ``"wisdom"`` (no re-measure).
+
+    With a ``mesh``, the plan is for ``pfft2_distributed``: the wisdom
+    key gains the mesh's ``topology_digest`` (schema v3 — a plan measured
+    on one topology is never served to another), the tuner is the
+    distributed one (``tune_dist_schedule``: measure races finalists
+    through the full all_to_all pipeline end to end on this mesh), and a
+    measured pick is recorded with its comm sample so calibration can fit
+    the interconnect constants.
     """
     pad_strategy = _PAD_STRATEGY[method]
 
@@ -142,9 +151,17 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
     # The lb partition is a function of (n, p); the FPM partitions (and
     # pad lengths) depend on the FPMSet and eps, so they digest into the
     # key — a different model must not be served another model's plan.
+    # A mesh additionally digests its topology: a measured distributed
+    # plan is a property of the pod it was timed on.
     detail = partition_digest(part.d, pads) if method != "lb" else None
+    topo = panels = None
+    if mesh is not None:
+        panels = dist_panel_space(n, int(mesh.shape[axis_name]))
+        topo = topology_digest(mesh, axis_name, panels=panels)
+        tuning["topology"] = topo
     key = wisdom_key(n=n, dtype=dtype, p=len(part.d), method=method,
-                     backend=jax.default_backend(), detail=detail)
+                     backend=jax.default_backend(), detail=detail,
+                     topology=topo)
     tuning["wisdom_key"] = key
     if wisdom is not None:
         hit = lookup_wisdom(wisdom, key)
@@ -161,6 +178,14 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
             else:
                 schedule = SegmentSchedule.homogeneous(normalize(plan), n,
                                                        part.d, pads)
+            if schedule is not None and mesh is not None:
+                # A distributed plan must lower to one SPMD program; a
+                # hand-edited or drifted entry that cannot is a miss.
+                from repro.core.pfft_dist import validate_spmd_schedule
+                try:
+                    validate_spmd_schedule(schedule)
+                except ValueError:
+                    schedule = None
             if schedule is not None:
                 tuning["source"] = "wisdom"
                 tuning["wisdom_entry"] = entry
@@ -178,14 +203,28 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
         from repro.plan.cost import CostParams
         params = fit_cost_params(wisdom)
         tuning["calibrated"] = params != CostParams.for_backend()
-    schedule, info = tune_schedule(n, d=part.d, pad_lengths=pads, fpms=fpms,
-                                   mode=tune, pad=pad_strategy, params=params,
-                                   dtype=np.dtype(dtype))
+    if mesh is not None:
+        schedule, info = tune_dist_schedule(
+            n, mesh, axis_name, pad_lengths=pads, mode=tune,
+            pad=pad_strategy, fpms=fpms, params=params, panels=panels,
+            dtype=np.dtype(dtype))
+    else:
+        schedule, info = tune_schedule(n, d=part.d, pad_lengths=pads,
+                                       fpms=fpms, mode=tune,
+                                       pad=pad_strategy, params=params,
+                                       dtype=np.dtype(dtype))
     tuning.update(info)
     tuning["source"] = tune
     if wisdom is not None and tune == "measure":
+        extra = None
+        if mesh is not None:
+            extra = {"topology": topo}
+            dist = info.get("dist", {})
+            if dist.get("comm_time_meas_s") is not None:
+                extra["comm_bytes"] = dist["comm_bytes"]
+                extra["comm_time_s"] = dist["comm_time_meas_s"]
         record_wisdom(wisdom, key, schedule, mode="measure",
-                      time_s=info.get("time_s"))
+                      time_s=info.get("time_s"), extra=extra)
     return schedule, tuning
 
 
@@ -193,15 +232,41 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
               method: Method = "fpm", eps: float = 0.05,
               tune: TuneMode = "off", wisdom: str | None = None,
               config: PlanConfig | None = None, dtype: str = "complex64",
+              mesh=None, axis_name: str = "fft",
               use_stockham: bool | None = None,
               fused: bool | None = None) -> PfftPlan:
     """Build a reusable plan; see the module docstring for the lifecycle.
+
+    ``mesh=`` plans for ``pfft2_distributed`` over the given ``Mesh``
+    instead of the single-host limb: the wisdom key gains the mesh's
+    ``topology_digest``, ``tune="measure"`` times finalists through the
+    full all_to_all pipeline end to end on that mesh, and ``execute``
+    runs the distributed transform.  Requires ``method="lb"`` (SPMD
+    shards rows evenly; the FPM partitions express heterogeneity through
+    the ragged layout, which this planner path does not drive yet) and
+    N divisible by the mesh axis size.
 
     ``use_stockham=``/``fused=`` are deprecated shims for the pre-planner
     flag API (they build an explicit config, so tuning is skipped).
     """
     if tune not in ("off", "estimate", "measure"):
         raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
+    if mesh is not None:
+        if method != "lb":
+            raise ValueError(
+                "plan_pfft(mesh=...) plans the SPMD pipeline, which shards "
+                f"rows evenly; method={method!r} is single-host only — use "
+                "method='lb' (pfft2_distributed expresses per-device "
+                "heterogeneity via ragged_row_layout instead)")
+        mesh_p = int(mesh.shape[axis_name])
+        if p is None:
+            p = mesh_p
+        elif p != mesh_p:
+            raise ValueError(f"p={p} conflicts with mesh axis "
+                             f"{axis_name!r} size {mesh_p}")
+        if n % p:
+            raise ValueError(f"N={n} must be divisible by mesh axis "
+                             f"{axis_name}={p}")
     if use_stockham is not None or fused is not None:
         if config is not None:
             raise ValueError("pass either config= or the legacy flags "
@@ -237,11 +302,19 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
             pads = None
 
     schedule, tuning = _resolve_schedule(n, method, part, pads, fpms, tune,
-                                         wisdom, config, dtype)
+                                         wisdom, config, dtype,
+                                         mesh=mesh, axis_name=axis_name)
     d = part.d
 
-    def raw(m):
-        return _pfft_limb(m, d, schedule=schedule)
+    if mesh is not None:
+        from repro.core.pfft_dist import pfft2_distributed
+
+        def raw(m):
+            return pfft2_distributed(m, mesh, axis_name,
+                                     config=schedule.anchor_config)
+    else:
+        def raw(m):
+            return _pfft_limb(m, d, schedule=schedule)
 
     return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
                     config=schedule.anchor_config, schedule=schedule,

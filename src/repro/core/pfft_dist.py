@@ -49,7 +49,26 @@ from repro.fft.fft2d import fft_rows, fft_rows_then_transpose
 from repro.plan.config import PlanConfig
 from repro.plan.schedule import SegmentSchedule
 
-__all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout"]
+__all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout",
+           "validate_spmd_schedule", "default_dist_pad_len"]
+
+# Inverse of PlanConfig.dist_padded: the ``padded`` vocabulary of this
+# module mapped back onto the planner's pad strategies.
+_PAD_FROM_PADDED = {"crop": "fpm", "czt": "czt", None: "none"}
+
+
+def default_dist_pad_len(n: int, padded: str | None) -> int:
+    """Default local FFT length under each padding semantics: the
+    model-free smooth size for 'crop', the next pow2 >= 2N-1 for 'czt'
+    (Bluestein's linear-convolution length), N otherwise.  The single
+    home of the rule — ``pfft2_distributed`` applies it and the dist
+    tuner's local-phase probe (``plan.tune``) must time the very same
+    program the end-to-end race ran."""
+    if padded == "crop":
+        return pad_to_smooth(n)
+    if padded == "czt":
+        return 1 << int(np.ceil(np.log2(2 * n - 1)))
+    return n
 
 
 def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
@@ -144,28 +163,55 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     return out.reshape(rows_out, p * k * c)
 
 
+def validate_spmd_schedule(schedule: SegmentSchedule,
+                           pad_len: int | None = None) -> PlanConfig:
+    """Eagerly reject schedules that cannot lower to one SPMD program.
+
+    Returns the schedule's common config on success.  Runs *before any
+    device work* — at plan-build time in ``make_pfft2_fn`` and at the top
+    of ``pfft2_distributed`` — so a heterogeneous schedule fails with the
+    schedule's own ``describe()`` instead of surfacing mid-trace inside
+    ``_local_phase`` after buffers are already placed.  Mixed effective
+    lengths are rejected only when no explicit ``pad_len`` overrides them
+    (SPMD runs one program, so the length must be uniform).
+    """
+    config = schedule.common_config
+    if config is None:
+        raise ValueError(
+            "pfft2_distributed runs one SPMD program per device; the "
+            f"heterogeneous schedule [{schedule.describe()}] mixes "
+            "per-segment configs and cannot be lowered to shard_map — "
+            "pass its common config or use the single-host executor "
+            "(repro.core.pfft)")
+    lengths = {e.length for e in schedule}
+    if pad_len is None and len(lengths) > 1:
+        raise ValueError(
+            "pfft2_distributed runs one SPMD program per device; the "
+            f"schedule [{schedule.describe()}] has mixed effective lengths "
+            f"{sorted(lengths)} and cannot be lowered to shard_map — use "
+            "the single-host executor (repro.core.pfft) or pass pad_len "
+            "explicitly")
+    return config
+
+
 def _coerce_dist_config(config: PlanConfig | None,
                         schedule: SegmentSchedule | None,
                         padded: str | None,
                         use_stockham: bool | None,
-                        pipeline_panels: int | None) -> PlanConfig:
+                        pipeline_panels: int | None,
+                        pad_len: int | None = None) -> PlanConfig:
     """Fold the legacy loose kwargs into a ``PlanConfig`` (deprecated shims).
 
     A ``schedule`` resolves to its common config: the SPMD local phase is
     one program on every device, so only homogeneous schedules route here
     (per-device heterogeneity is expressed through the ragged layout and
-    the FPM-chosen local ``pad_len``, not divergent programs).
+    the FPM-chosen local ``pad_len``, not divergent programs);
+    ``validate_spmd_schedule`` raises eagerly otherwise.
     """
     if schedule is not None:
         if config is not None:
             raise ValueError("pass either schedule= or config=, not both")
-        config = schedule.common_config
-        if config is None:
-            raise ValueError(
-                "pfft2_distributed runs one SPMD program per device; a "
-                "heterogeneous schedule (mixed per-segment configs) cannot "
-                "be lowered to shard_map — pass its common config or use "
-                "the single-host executor (repro.core.pfft)")
+        config = validate_spmd_schedule(schedule, pad_len)
     if config is not None:
         if use_stockham is not None or pipeline_panels is not None:
             raise ValueError(
@@ -182,8 +228,64 @@ def _coerce_dist_config(config: PlanConfig | None,
             DeprecationWarning, stacklevel=3)
     return PlanConfig(
         radix=2 if use_stockham else None,
-        pad={"crop": "fpm", "czt": "czt", None: "none"}[padded],
+        pad=_PAD_FROM_PADDED[padded],
         pipeline_panels=int(pipeline_panels) if pipeline_panels else 1)
+
+
+def _resolve_dist_config(n: int, mesh: Mesh, axis_name: str, *, pad: str,
+                         dtype, tune: str, wisdom: str | None,
+                         pad_len: int | None) -> tuple[PlanConfig, dict]:
+    """Plan a raw ``pfft2_distributed`` call the way ``plan_pfft`` plans.
+
+    Resolution order mirrors ``core.api._resolve_schedule``: wisdom hit
+    (per-topology v3 key) > tuner > default.  A measured pick is recorded
+    back — with its comm sample — so the next process on the same mesh is
+    served from disk with zero re-measurement.  Keys use the method the
+    pad strategy implies, so a ``plan_pfft(mesh=...)`` entry and a raw
+    ``pfft2_distributed(tune=...)`` entry for the same problem coincide.
+    """
+    from repro.plan.calibrate import fit_cost_params
+    from repro.plan.tune import dist_panel_space, tune_dist_config
+    from repro.plan.wisdom import (lookup_wisdom, record_wisdom,
+                                   topology_digest, wisdom_key)
+
+    if tune not in ("off", "estimate", "measure"):
+        raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
+    p = int(mesh.shape[axis_name])
+    panels = dist_panel_space(n, p)
+    topo = topology_digest(mesh, axis_name, panels=panels)
+    method = {"none": "lb", "fpm": "fpm-pad", "czt": "fpm-czt"}[pad]
+    key = wisdom_key(n=n, dtype=np.dtype(dtype).name, p=p, method=method,
+                     backend=jax.default_backend(), topology=topo)
+    tuning: dict = {"mode": tune, "wisdom_key": key, "topology": topo}
+    if wisdom is not None:
+        hit = lookup_wisdom(wisdom, key)
+        if hit is not None:
+            plan, entry = hit
+            cfg = (plan.common_config if isinstance(plan, SegmentSchedule)
+                   else plan)
+            if cfg is not None and cfg.pad == pad:
+                tuning["source"] = "wisdom"
+                tuning["wisdom_entry"] = entry
+                return cfg, tuning
+    if tune == "off":
+        tuning["source"] = "off"
+        return PlanConfig(pad=pad), tuning
+    params = fit_cost_params(wisdom) if wisdom is not None else None
+    cfg, info = tune_dist_config(n, mesh, axis_name, mode=tune, pad=pad,
+                                 pad_len=pad_len, params=params,
+                                 panels=panels, dtype=np.dtype(dtype))
+    tuning.update(info)
+    tuning["source"] = tune
+    if wisdom is not None and tune == "measure" and "time_s" in info:
+        extra = {"topology": topo}
+        dist = info.get("dist", {})
+        if dist.get("comm_time_meas_s") is not None:
+            extra["comm_bytes"] = dist["comm_bytes"]
+            extra["comm_time_s"] = dist["comm_time_meas_s"]
+        record_wisdom(wisdom, key, cfg, mode="measure",
+                      time_s=info["time_s"], extra=extra)
+    return cfg, tuning
 
 
 def pfft2_distributed(
@@ -198,6 +300,8 @@ def pfft2_distributed(
     use_stockham: bool | None = None,
     backend: str | None = None,
     pipeline_panels: int | None = None,
+    tune: str = "off",
+    wisdom: str | None = None,
 ) -> jnp.ndarray:
     """Distributed 2-D DFT of a square matrix sharded by rows over ``axis_name``.
 
@@ -214,24 +318,29 @@ def pfft2_distributed(
     to be homogeneous).  The loose ``use_stockham=``/``pipeline_panels=``
     kwargs are deprecated shims.
 
+    ``tune=``/``wisdom=`` plan the call when no explicit config/schedule
+    is given: consult the per-topology wisdom store, tune on a miss
+    (``tune="measure"`` times finalists end-to-end on *this* mesh), and
+    record the measured pick — the same lifecycle ``plan_pfft(mesh=...)``
+    runs, usable straight from the distributed entry point.
+
     ``pad_len``: FPM-chosen local FFT length (defaults to the model-free
     smooth size for 'crop', next pow2 >= 2N-1 for 'czt').
     """
+    if (tune != "off" or wisdom is not None) and config is None \
+            and schedule is None:
+        pad = _PAD_FROM_PADDED[padded]
+        config, _ = _resolve_dist_config(
+            m.shape[0], mesh, axis_name, pad=pad, dtype=m.dtype,
+            tune=tune, wisdom=wisdom, pad_len=pad_len)
     config = _coerce_dist_config(config, schedule, padded, use_stockham,
-                                 pipeline_panels)
+                                 pipeline_panels, pad_len)
     if schedule is not None and pad_len is None:
         # The schedule's entries carry the FPM-chosen effective length —
         # the very thing the planner picked; honor it rather than the
-        # model-free smooth default.  SPMD runs one program, so the
-        # length must be uniform across entries.
-        lengths = {e.length for e in schedule}
-        if len(lengths) > 1:
-            raise ValueError(
-                "pfft2_distributed runs one SPMD program per device; a "
-                f"schedule with mixed effective lengths {sorted(lengths)} "
-                "cannot be lowered to shard_map — use the single-host "
-                "executor (repro.core.pfft) or pass pad_len explicitly")
-        pad_len = int(next(iter(lengths)))
+        # model-free smooth default (uniformity was validated eagerly by
+        # validate_spmd_schedule inside _coerce_dist_config).
+        pad_len = int(next(iter({e.length for e in schedule})))
     padded = config.dist_padded
     panels = config.pipeline_panels
     n = m.shape[0]
@@ -242,12 +351,7 @@ def pfft2_distributed(
         raise ValueError(
             f"pipeline_panels={panels} must divide local rows {n // p}")
     if pad_len is None:
-        if padded == "crop":
-            pad_len = pad_to_smooth(n)
-        elif padded == "czt":
-            pad_len = 1 << int(np.ceil(np.log2(2 * n - 1)))
-        else:
-            pad_len = n
+        pad_len = default_dist_pad_len(n, padded)
 
     spec_rows = P(axis_name, None)
     phase = functools.partial(
@@ -268,7 +372,25 @@ def pfft2_distributed(
 
 
 def make_pfft2_fn(mesh: Mesh, n: int, axis_name: str = "fft", **kw):
-    """jit-compiled distributed 2-D DFT closed over a mesh (sharded in/out)."""
+    """jit-compiled distributed 2-D DFT closed over a mesh (sharded in/out).
+
+    Planning happens *now*, not at first call: a ``schedule=`` is
+    SPMD-validated eagerly (build-time error with the schedule's
+    ``describe()``), and ``tune=``/``wisdom=`` resolve to a concrete
+    config before jit so measurement never runs inside a trace (the plan
+    is keyed for complex64 signals, the pipeline's working dtype).
+    """
+    if kw.get("schedule") is not None:
+        validate_spmd_schedule(kw["schedule"], kw.get("pad_len"))
+    tune = kw.pop("tune", "off")
+    wisdom = kw.pop("wisdom", None)
+    if (tune != "off" or wisdom is not None) \
+            and kw.get("config") is None and kw.get("schedule") is None:
+        pad = _PAD_FROM_PADDED[kw.get("padded")]
+        kw.pop("padded", None)
+        kw["config"], _ = _resolve_dist_config(
+            n, mesh, axis_name, pad=pad, dtype=np.complex64, tune=tune,
+            wisdom=wisdom, pad_len=kw.get("pad_len"))
     sharding = NamedSharding(mesh, P(axis_name, None))
     fn = functools.partial(pfft2_distributed, mesh=mesh, axis_name=axis_name, **kw)
     return jax.jit(fn, in_shardings=(sharding,), out_shardings=sharding)

@@ -14,7 +14,7 @@ try:  # AxisType landed after jax 0.4.37; Auto is the pre-AxisType default.
 except ImportError:  # pragma: no cover - version-dependent
     AxisType = None
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_fft_mesh"]
 
 
 def _make_mesh(shape, axes):
@@ -36,3 +36,17 @@ def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist —
     used by tests and the quickstart example."""
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_fft_mesh(p: int | None = None, axis_name: str = "fft"):
+    """1-D mesh for the distributed PFFT pipeline (and its tuner).
+
+    ``p`` defaults to every visible device — on a forced-multi-device CPU
+    host (``--xla_force_host_platform_device_count=k``) that is the faked
+    topology the dist test rig and the microbench ``dist`` sweep run on.
+    The axis name is part of the plan's ``topology_digest``, so callers
+    who rename it get distinct wisdom keys by construction.
+    """
+    if p is None:
+        p = jax.device_count()
+    return _make_mesh((p,), (axis_name,))

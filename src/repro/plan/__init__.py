@@ -15,12 +15,15 @@ point is ``repro.core.api.plan_pfft(tune=..., wisdom=...)``.
 from repro.plan.config import PlanConfig
 from repro.plan.schedule import SegmentPlan, SegmentSchedule
 from repro.plan.pads import czt_fft_lengths, fpm_pad_lengths
-from repro.plan.cost import (CostParams, estimate_cost,
+from repro.plan.cost import (CostParams, dist_comm_bytes, estimate_cost,
                              estimate_schedule_cost, phase_dispatch_count)
 from repro.plan.wisdom import (WISDOM_VERSION, load_wisdom, lookup_wisdom,
-                               partition_digest, record_wisdom, wisdom_key)
-from repro.plan.tune import (candidate_configs, measure_configs,
+                               partition_digest, record_wisdom,
+                               topology_digest, wisdom_key)
+from repro.plan.tune import (candidate_configs, dist_panel_space,
+                             measure_configs, measure_dist_configs,
                              segment_candidate_configs, tune_config,
+                             tune_dist_config, tune_dist_schedule,
                              tune_schedule)
 from repro.plan.calibrate import fit_cost_params
 
@@ -28,11 +31,12 @@ __all__ = [
     "PlanConfig",
     "SegmentPlan", "SegmentSchedule",
     "czt_fft_lengths", "fpm_pad_lengths",
-    "CostParams", "estimate_cost", "estimate_schedule_cost",
-    "phase_dispatch_count",
+    "CostParams", "dist_comm_bytes", "estimate_cost",
+    "estimate_schedule_cost", "phase_dispatch_count",
     "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "partition_digest",
-    "record_wisdom", "wisdom_key",
-    "candidate_configs", "measure_configs", "segment_candidate_configs",
-    "tune_config", "tune_schedule",
+    "record_wisdom", "topology_digest", "wisdom_key",
+    "candidate_configs", "dist_panel_space", "measure_configs",
+    "measure_dist_configs", "segment_candidate_configs",
+    "tune_config", "tune_dist_config", "tune_dist_schedule", "tune_schedule",
     "fit_cost_params",
 ]

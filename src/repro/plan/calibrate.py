@@ -9,20 +9,36 @@ our own cost model.
 
 ``fit_cost_params`` solves the model's own per-phase equation
 
-    time/2 − traffic = base_seconds · factor[backend] + dispatches · c_d
+    time/2 = base_seconds · factor[backend] + dispatches · c_d
+             + traffic_bytes · (1/BW_hbm)
 
 as a least-squares system over the measured entries, with one unknown
-per backend factor (xla / stockham / pallas / fused) plus the dispatch
-overhead ``c_d``.  The symbolic factor decomposition comes from
-``cost._factor_term`` — the estimate model and this fit share one
-branch logic and cannot drift.  Each entry contributes its
-makespan-dominant segment's flop-time as the factor feature (schedule
-entries carry exact (rows, length, config) structure; bare-config
-entries assume the even LB partition — the shape the microbenchmark
-warms).  With fewer than ``min_entries`` measured entries, or when the
-fit degenerates (a factor column absent or a non-positive solution),
-the hard-coded constants are kept component-wise — calibration refines,
-never breaks.
+per backend factor (xla / stockham / pallas / fused), the dispatch
+overhead ``c_d``, and the inverse HBM bandwidth (the traffic term used
+to be subtracted with the hard-coded constant; with varied measured
+sizes it is identifiable, so it is now a fitted column — the ROADMAP's
+``hbm_bytes_per_s`` calibration.  ``nominal_flops`` stays fixed: the
+backend factors multiply it, so a flop-rate error is absorbed by them
+and a separate unknown would be unidentifiable).  The symbolic factor
+decomposition comes from ``cost._factor_term`` — the estimate model and
+this fit share one branch logic and cannot drift.  Each entry
+contributes its makespan-dominant segment's flop-time as the factor
+feature (schedule entries carry exact (rows, length, config) structure;
+bare-config entries assume the even LB partition — the shape the
+microbenchmark warms).  With fewer than ``min_entries`` measured
+entries, or when the fit degenerates (a factor column absent or a
+non-positive solution), the hard-coded constants are kept
+component-wise — calibration refines, never breaks.
+
+Distributed (``topo=``) entries additionally carry a measured comm
+sample (``comm_bytes`` + ``comm_time_s``, recorded by
+``tune_dist_config``); from two or more such samples the interconnect
+constants are fit as the line
+
+    comm_time/2 = comm_latency_s + comm_bytes · (1/BW_interconnect)
+
+(two all_to_all phases per transform).  One sample pins the bandwidth
+alone (latency kept at the default); zero keeps both defaults.
 
 File-path fits are cached per (path, mtime): ``plan_pfft(wisdom=...)``
 calibrates on every tuned call, and re-running lstsq over an unchanged
@@ -45,7 +61,7 @@ from repro.plan.wisdom import load_wisdom
 
 __all__ = ["fit_cost_params"]
 
-_COLS = ("dispatch", "xla", "stockham", "pallas", "fused")
+_COLS = ("dispatch", "xla", "stockham", "pallas", "fused", "hbm")
 _FIT_CACHE: dict[tuple, CostParams] = {}
 
 
@@ -84,6 +100,54 @@ def _factor_feature(rows: int, length: int, cfg: PlanConfig,
     return name, float(fft_flops(rows, length)) / nominal_flops * scale
 
 
+def _fit_comm_params(entries: dict, backend: str,
+                     params: CostParams) -> CostParams:
+    """Fold measured comm samples into ``params``'s interconnect constants.
+
+    Samples are distributed wisdom entries (``topo=`` keys) carrying the
+    ``comm_bytes``/``comm_time_s`` extras ``tune_dist_config`` records.
+    ``comm_time_s`` covers both phases, so the fitted line is
+    ``comm_time/2 = latency + bytes/BW``; >= 2 samples with distinct byte
+    counts fit both constants, exactly 1 fits the bandwidth with the
+    default latency, non-positive solutions keep the defaults
+    component-wise.
+    """
+    samples = []
+    for key, entry in entries.items():
+        if not isinstance(entry, dict) or "|topo=" not in key:
+            continue
+        if _parse_key(key).get("backend") != backend:
+            continue
+        try:
+            bytes_, t = float(entry["comm_bytes"]), float(entry["comm_time_s"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if bytes_ > 0 and t > 0:
+            samples.append((bytes_, t / 2.0))
+    if not samples:
+        return params
+    latency = params.comm_latency_s
+    bw = params.interconnect_bytes_per_s
+    if len({b for b, _ in samples}) >= 2:
+        A = np.array([[1.0, b] for b, _ in samples])
+        y = np.array([t for _, t in samples])
+        try:
+            x, *_ = np.linalg.lstsq(A, y, rcond=None)
+        except np.linalg.LinAlgError:
+            x = None
+        if x is not None:
+            if x[0] > 0:
+                latency = float(x[0])
+            if x[1] > 0:
+                bw = 1.0 / float(x[1])
+    else:
+        b0, t0 = samples[0]
+        if t0 > latency:
+            bw = b0 / (t0 - latency)
+    return dataclasses.replace(params, comm_latency_s=latency,
+                               interconnect_bytes_per_s=bw)
+
+
 def fit_cost_params(store: str | dict, *, backend: str | None = None,
                     min_entries: int = 8) -> CostParams:
     """Least-squares ``CostParams`` from a wisdom store's measured entries.
@@ -93,7 +157,10 @@ def fit_cost_params(store: str | dict, *, backend: str | None = None,
     jax backend) contribute.  Returns the fitted params, or the
     hard-coded ``CostParams.for_backend(backend)`` when fewer than
     ``min_entries`` measured entries exist; degenerate components fall
-    back individually.
+    back individually.  Interconnect constants are fit separately from
+    the distributed entries' comm samples (``_fit_comm_params``) and need
+    no minimum beyond their own — one dist measurement already beats the
+    hard-coded bandwidth guess.
     """
     if backend is None:
         import jax
@@ -116,6 +183,12 @@ def fit_cost_params(store: str | dict, *, backend: str | None = None,
     for key, entry in entries.items():
         if not isinstance(entry, dict) or "time_s" not in entry:
             continue
+        if "|topo=" in key:
+            # Distributed entries time the *whole* pipeline, all_to_all
+            # included; feeding them into the compute-side equation would
+            # bill comm seconds to a backend factor.  They contribute
+            # through _fit_comm_params instead.
+            continue
         fields = _parse_key(key)
         if fields.get("backend") != backend:
             continue
@@ -126,9 +199,8 @@ def fit_cost_params(store: str | dict, *, backend: str | None = None,
             continue  # schema drift is never an error, just not a sample
         if not segs:
             continue
-        traffic = 0.0 if fused else (
-            2.0 * n * n * _COMPLEX64_BYTES / defaults.hbm_bytes_per_s)
-        b = float(entry["time_s"]) / 2.0 - traffic
+        traffic_bytes = 0.0 if fused else 2.0 * n * n * _COMPLEX64_BYTES
+        b = float(entry["time_s"]) / 2.0
         # Makespan-dominant segment: largest *modeled* time under the
         # default factors (a tiny interpret-mode pallas segment can
         # dominate a large xla one, so raw flop-time would credit the
@@ -147,6 +219,7 @@ def fit_cost_params(store: str | dict, *, backend: str | None = None,
         row = np.zeros(len(_COLS))
         row[0] = dispatches
         row[_COLS.index(col)] = base
+        row[_COLS.index("hbm")] = traffic_bytes
         A_rows.append(row)
         b_rows.append(b)
 
@@ -168,9 +241,14 @@ def fit_cost_params(store: str | dict, *, backend: str | None = None,
             j = _COLS.index("fused")
             fused_factor = (float(x[j]) if np.any(A[:, j] > 0) and x[j] > 0
                             else defaults.fused_factor)
+            j = _COLS.index("hbm")
+            hbm = (1.0 / float(x[j]) if np.any(A[:, j] > 0) and x[j] > 0
+                   else defaults.hbm_bytes_per_s)
             fitted = dataclasses.replace(defaults, dispatch_overhead_s=c_d,
                                          backend_factor=factors,
-                                         fused_factor=fused_factor)
+                                         fused_factor=fused_factor,
+                                         hbm_bytes_per_s=hbm)
+    fitted = _fit_comm_params(entries, backend, fitted)
     if cache_key is not None:
         if len(_FIT_CACHE) > 64:
             _FIT_CACHE.clear()

@@ -34,8 +34,8 @@ from repro.core.fpm import FPMSet, fft_flops
 from repro.plan.config import PlanConfig
 from repro.plan.schedule import SegmentSchedule
 
-__all__ = ["CostParams", "estimate_cost", "estimate_schedule_cost",
-           "phase_dispatch_count"]
+__all__ = ["CostParams", "dist_comm_bytes", "estimate_cost",
+           "estimate_schedule_cost", "phase_dispatch_count"]
 
 _COMPLEX64_BYTES = 8
 # Bluestein computes one N-point DFT as ~3 length-m FFTs (forward, kernel
@@ -57,6 +57,8 @@ class CostParams:
     backend_factor: Mapping[str, float]  # compute multiplier per fft backend
     fused_factor: float             # multiplier for the fused kernel's compute
     panel_overlap: float = 0.6      # fraction of comm hidden per extra panel
+    interconnect_bytes_per_s: float = 2e10  # all_to_all cross-device bandwidth
+    comm_latency_s: float = 0.0     # fixed per-phase collective launch cost
 
     @classmethod
     def for_backend(cls, backend: str | None = None) -> "CostParams":
@@ -66,6 +68,9 @@ class CostParams:
         if backend == "cpu":
             # Interpret-mode Pallas re-traces every lane op in Python; the
             # pure-jnp Stockham is an unrolled stage loop vs pocketfft.
+            # Forced-host "devices" exchange through shared memory, so the
+            # interconnect is loopback bandwidth plus a collective-launch
+            # latency of XLA's CPU all_to_all.
             return cls(
                 nominal_flops=2e9,
                 dispatch_overhead_s=5e-5,
@@ -73,10 +78,12 @@ class CostParams:
                 backend_factor={"xla": 1.0, "stockham": 8.0, "pallas": 300.0},
                 fused_factor=300.0,
                 panel_overlap=0.0,
+                interconnect_bytes_per_s=1e10,
+                comm_latency_s=5e-5,
             )
         # Accelerator defaults (v5e-class): the radix-4 kernel beats the
         # library FFT (half the passes, twiddles from iota), fused wins by
-        # skipping the HBM round trip.
+        # skipping the HBM round trip; ICI all_to_all runs near link rate.
         return cls(
             nominal_flops=2e11,
             dispatch_overhead_s=3e-6,
@@ -84,7 +91,22 @@ class CostParams:
             backend_factor={"xla": 1.0, "stockham": 1.6, "pallas": 0.8},
             fused_factor=0.8,
             panel_overlap=0.6,
+            interconnect_bytes_per_s=9e10,
+            comm_latency_s=1e-6,
         )
+
+
+def dist_comm_bytes(n: int, p: int, *, itemsize: int = _COMPLEX64_BYTES
+                    ) -> float:
+    """Cross-device bytes of one phase's ``all_to_all`` over ``p`` devices.
+
+    Each device holds an (N/p, N) block and keeps its own diagonal tile,
+    so (p-1)/p of the matrix crosses the interconnect per phase (0 on a
+    1-device mesh — the degenerate exchange is a local reshuffle).
+    """
+    if p <= 1:
+        return 0.0
+    return float(n) * float(n) * itemsize * (p - 1) / p
 
 
 def _segment_work(n: int, d, pad_lengths) -> list[tuple[int, int]]:
@@ -211,7 +233,13 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
     phase = makespan + traffic + dispatches * params.dispatch_overhead_s
 
     k = max(e.config.pipeline_panels for e in schedule.entries)
-    comm = comm_bytes / params.hbm_bytes_per_s
+    comm = 0.0
+    if comm_bytes:
+        # The all_to_all crosses the interconnect, not HBM; the fixed
+        # collective-launch latency is paid once per phase (panels reuse
+        # the issued collective stream).
+        comm = comm_bytes / params.interconnect_bytes_per_s \
+            + params.comm_latency_s
     if k > 1:
         comm *= 1.0 - params.panel_overlap * (k - 1) / k
         phase += (k - 1) * params.dispatch_overhead_s

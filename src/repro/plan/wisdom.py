@@ -16,6 +16,15 @@ full heterogeneous ``SegmentSchedule`` (``"schedule"``), so a tuner that
 once picked per-segment variants serves the exact mix back.  v1 stores
 predate schedules and are treated as whole-file misses.
 
+Schema v3 adds *per-topology* keys for distributed plans: a key may end
+in ``|topo=<topology_digest>`` (device count, mesh axis name, platform,
+candidate pipeline-panel counts), so a plan measured end-to-end on a
+4-device mesh is never served to an 8-device one.  v2 files keep being
+served for *single-host* keys (their entry schema is unchanged), but any
+``topo=`` lookup against a v2 file is a miss: v2 predates distributed
+measurement, so whatever a v2 store claims about a topology key was not
+measured on that topology.  v1 stays a whole-file miss.
+
 Writes are atomic (write a sibling ``.tmp``, then ``os.replace`` — the
 same idiom as ``save_fpms``) so concurrent readers never observe a torn
 file.  A version bump invalidates the whole store: old entries were
@@ -38,16 +47,22 @@ __all__ = [
     "WISDOM_VERSION",
     "wisdom_key",
     "partition_digest",
+    "topology_digest",
     "load_wisdom",
     "lookup_wisdom",
     "record_wisdom",
 ]
 
-WISDOM_VERSION = 2
+WISDOM_VERSION = 3
+# v2 entries are schema-compatible (config/schedule values); serving them
+# for single-host keys spares a re-tune.  Distributed (topo=) lookups
+# treat a v2 file as a miss — see module docstring and lookup_wisdom.
+_SERVED_VERSIONS = (2, WISDOM_VERSION)
+_TOPO_FIELD = "|topo="
 
 
 def wisdom_key(*, n: int, dtype: str, p: int, method: str, backend: str,
-               detail: str | None = None) -> str:
+               detail: str | None = None, topology: str | None = None) -> str:
     """Canonical store key; every field that changes the best config is in it.
 
     ``detail`` carries anything beyond (n, dtype, p, method, backend) the
@@ -55,9 +70,17 @@ def wisdom_key(*, n: int, dtype: str, p: int, method: str, backend: str,
     partition and pad lengths (different FPMSets/eps give different
     partitions, which change the dispatch counts the tuner prices).
     Method 'lb' needs none: its partition is a function of (n, p).
+    ``topology`` marks a *distributed* plan: the ``topology_digest`` of
+    the mesh the plan was (or is to be) measured on — an end-to-end
+    all_to_all time is a property of the topology, so the same problem on
+    a different mesh must be a different key.
     """
     base = f"n={int(n)}|dtype={dtype}|p={int(p)}|method={method}|backend={backend}"
-    return base if detail is None else f"{base}|part={detail}"
+    if detail is not None:
+        base = f"{base}|part={detail}"
+    if topology is not None:
+        base = f"{base}{_TOPO_FIELD}{topology}"
+    return base
 
 
 def partition_digest(d, pad_lengths=None) -> str:
@@ -74,18 +97,51 @@ def partition_digest(d, pad_lengths=None) -> str:
     return format(zlib.crc32(raw), "08x")
 
 
-def load_wisdom(path: str) -> dict:
-    """Entries of a wisdom file; {} on missing, corrupt, or version-mismatched
-    files (all are cache misses, never errors)."""
+def topology_digest(mesh=None, axis_name: str = "fft", *,
+                    devices: int | None = None, platform: str | None = None,
+                    panels=(1,)) -> str:
+    """The ``topology`` field of a distributed wisdom key.
+
+    Everything an end-to-end distributed measurement is conditioned on:
+    the device count along the FFT mesh axis, the axis name (it names the
+    collective's communicator), the device platform, and the candidate
+    pipeline-panel counts the tuner raced (a different panel space is a
+    different tuning experiment).  Deliberately human-readable — a store
+    should say *which* pod an entry was measured on, not just hash it.
+    """
+    if devices is None:
+        if mesh is None:
+            raise ValueError("topology_digest needs a mesh or devices=")
+        devices = int(mesh.shape[axis_name])
+    if platform is None:
+        if mesh is not None and mesh.devices.size:
+            platform = mesh.devices.flat[0].platform
+        else:  # pragma: no cover - devices= callers normally pass platform
+            import jax
+            platform = jax.default_backend()
+    ks = "-".join(str(int(k)) for k in sorted(set(panels))) or "1"
+    return f"{int(devices)}x{axis_name}.{platform}.k{ks}"
+
+
+def _load_doc(path: str) -> tuple[int, dict]:
+    """(version, entries) of a wisdom file; (0, {}) on missing, corrupt,
+    or unserveable-version files (all are cache misses, never errors)."""
     try:
         with open(path) as fh:
             doc = json.load(fh)
     except (OSError, json.JSONDecodeError):
-        return {}
-    if not isinstance(doc, dict) or doc.get("version") != WISDOM_VERSION:
-        return {}
+        return 0, {}
+    if not isinstance(doc, dict) or doc.get("version") not in _SERVED_VERSIONS:
+        return 0, {}
     entries = doc.get("entries")
-    return entries if isinstance(entries, dict) else {}
+    return int(doc["version"]), entries if isinstance(entries, dict) else {}
+
+
+def load_wisdom(path: str) -> dict:
+    """Entries of a wisdom file; {} on missing, corrupt, or version-mismatched
+    files (all are cache misses, never errors).  Serves v2 stores as well
+    as v3 — per-key version rules live in ``lookup_wisdom``."""
+    return _load_doc(path)[1]
 
 
 def lookup_wisdom(path: str, key: str
@@ -95,8 +151,13 @@ def lookup_wisdom(path: str, key: str
     The plan is a ``SegmentSchedule`` when the entry persisted one, else
     the single ``PlanConfig`` — callers (``plan_pfft``) lift a bare
     config into the degenerate schedule for the current partition.
+    A distributed (``topo=``) key against a v2 store is always a miss,
+    whatever the file contains: v2 predates per-topology measurement.
     """
-    entry = load_wisdom(path).get(key)
+    version, entries = _load_doc(path)
+    if version < WISDOM_VERSION and _TOPO_FIELD in key:
+        return None
+    entry = entries.get(key)
     if not isinstance(entry, dict):
         return None
     try:

@@ -1,7 +1,92 @@
+"""Shared fixtures, including the forced-multi-device CPU test rig.
+
+jax locks the device count at first init, so a single pytest process
+cannot flip between 1 and 4 devices.  Two complementary rigs:
+
+* **Env guard** — when ``REPRO_FORCE_DEVICES=k`` is set, this conftest
+  injects ``--xla_force_host_platform_device_count=k`` into ``XLA_FLAGS``
+  *before anything imports jax* (conftest imports precede test modules),
+  so the whole pytest session sees a k-device CPU topology in-process.
+  The CI ``dist`` job runs the multi-device subset this way; tests that
+  need it carry ``@pytest.mark.multi_device`` and skip themselves on
+  ordinary 1-device runs.
+* **Subprocess runner** — the ``dist_subprocess`` fixture runs a script
+  under a fresh interpreter with the forced flag, so the *default* tier-1
+  suite still exercises multi-device behavior without constraining the
+  parent process.  This replaces the per-test copies of the
+  subprocess/XLA_FLAGS boilerplate that used to live in each dist test.
+"""
+
+import os
+import re
+import subprocess
+import sys
+
 import numpy as np
 import pytest
+
+_FORCE = os.environ.get("REPRO_FORCE_DEVICES")
+if _FORCE and "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_FORCE)}").strip()
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multi_device: needs >= 2 jax devices (run with REPRO_FORCE_DEVICES)")
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+
+    if jax.device_count() > 1:
+        return
+    skip = pytest.mark.skip(
+        reason="needs a multi-device topology; set REPRO_FORCE_DEVICES=4")
+    for item in items:
+        if "multi_device" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def dist_subprocess():
+    """Run ``script`` in a fresh interpreter on a forced k-device CPU.
+
+    The script sees ``src/`` on ``sys.path`` and XLA_FLAGS set *before*
+    its first jax import.  Asserts the script printed ``sentinel`` (the
+    convention every dist script here ends with) and returns the
+    completed process for further output checks.
+    """
+
+    def run(script: str, *, devices: int = 4, sentinel: str = "OK",
+            timeout: int = 600) -> subprocess.CompletedProcess:
+        env = dict(os.environ)
+        # Drop any inherited force-device flag first (importing
+        # repro.launch.dryrun plants a 512-device one in this process's
+        # environ) so the child's count is exactly ``devices``.
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={devices}"
+        ).strip()
+        env["PYTHONPATH"] = SRC + os.pathsep * bool(env.get("PYTHONPATH")) \
+            + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        assert sentinel in proc.stdout, (
+            f"dist subprocess did not reach {sentinel!r}:\n"
+            f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-2000:]}")
+        return proc
+
+    return run
