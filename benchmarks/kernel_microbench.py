@@ -32,6 +32,12 @@ acceptance checks assert on):
                the estimate-fallback facts; run under
                ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
                (the CI dist job does) for a real comm sample.
+  hetero-dist  grouped-vs-homogeneous device-group programs: a synthetic
+               mixed-pad fleet drives ``grouped_dist_schedule`` and both
+               programs race end-to-end through ``pfft2_distributed``;
+               the record carries the grouped-vs-homogeneous makespan
+               delta and the measured winner warms the same v3 topology
+               key ``plan_pfft(mesh=..., method="fpm-pad")`` consults.
 
 ``--wisdom W`` writes each benched size's best *measured* config into the
 wisdom store ``W`` (keyed exactly as ``plan_pfft`` keys its lookups), so a
@@ -62,9 +68,11 @@ from repro.kernels.fft.kernel import stockham_stage_count
 from repro.kernels.fft.ops import fft_rows_op
 from repro.kernels.fused.ops import fft_rows_transpose_op
 from repro.kernels.transpose.ops import transpose_op
-from repro.plan import (CostParams, PlanConfig, candidate_configs,
-                        dist_comm_bytes, dist_panel_space, estimate_cost,
-                        estimate_schedule_cost, measure_configs,
+from repro.plan import (CostParams, PlanConfig, SegmentSchedule,
+                        candidate_configs, dist_comm_bytes, dist_panel_space,
+                        estimate_cost, estimate_grouped_cost,
+                        estimate_schedule_cost, grouped_dist_schedule,
+                        measure_configs, measure_dist_configs,
                         partition_digest, record_wisdom, topology_digest,
                         tune_config, tune_dist_config, tune_schedule,
                         wisdom_key)
@@ -317,6 +325,83 @@ def bench_dist(sizes, wisdom_path: str | None = None) -> list[dict]:
     return recs
 
 
+def bench_hetero_dist(sizes, wisdom_path: str | None = None) -> list[dict]:
+    """Grouped-vs-homogeneous distributed makespan (device-group programs).
+
+    Synthetic per-device pad lengths — half the devices pow2-padded, the
+    rest unpadded — make ``grouped_dist_schedule``'s per-device argmin
+    genuinely mixed, and the cost constants favor the *pure-jnp* radix-2
+    kernel on pow2 lengths so the raced branches stay cheap on this CPU
+    container (the point is the grouped-vs-homogeneous structure and the
+    makespan delta, not which backend wins interpret mode).  On a
+    multi-device host both programs run end to end through
+    ``pfft2_distributed`` (the grouped one through its ``lax.switch``
+    lowering) and the record carries the measured delta; the measured
+    winner lands in wisdom under the same per-topology v3 key
+    ``plan_pfft(mesh=..., method="fpm-pad")`` looks up.
+    """
+    import dataclasses
+
+    import jax
+    from repro.launch.mesh import make_fft_mesh
+
+    p = jax.device_count()
+    mesh = make_fft_mesh(p)
+    backend = jax.default_backend()
+    params = dataclasses.replace(
+        CostParams.for_backend("cpu"),
+        backend_factor={"xla": 1.0, "stockham": 0.5, "pallas": 300.0})
+    recs = []
+    for n in sizes:
+        if n % p:
+            continue
+        pow2 = 1 << int(np.ceil(np.log2(n + 1)))
+        pads = np.array([pow2 if i >= p // 2 else n for i in range(p)],
+                        dtype=np.int64)
+        d = np.full(p, n // p, dtype=np.int64)
+        grouped = grouped_dist_schedule(n, p, pad_lengths=pads, pad="fpm",
+                                        params=params)
+        homo = SegmentSchedule.homogeneous(PlanConfig(pad="fpm"), n, d, pads)
+        comm = dist_comm_bytes(n, p)
+        est_g = (estimate_grouped_cost(grouped, params=params,
+                                       comm_bytes=comm)
+                 if grouped is not None else None)
+        est_h = estimate_grouped_cost(homo, params=params, comm_bytes=comm)
+        rec = {
+            "bench": "hetero-dist", "n": int(n), "devices": p,
+            "grouped": grouped.describe() if grouped is not None else None,
+            "distinct_configs": (len(grouped.configs)
+                                 if grouped is not None else 1),
+            "makespan_est_grouped_s": est_g,
+            "makespan_est_homo_s": float(est_h),
+            "measured": bool(p > 1 and grouped is not None),
+        }
+        if rec["measured"]:
+            times = measure_dist_configs([homo, grouped], n, mesh, "fft",
+                                         rounds=3)
+            t_h, t_g = times[homo], times[grouped]
+            rec.update({
+                "time_grouped_s": float(t_g),
+                "time_homo_s": float(t_h),
+                "grouped_vs_homo_delta_s": float(t_h - t_g),
+            })
+            if wisdom_path:
+                winner, t_best = ((grouped, t_g) if t_g <= t_h
+                                  else (homo, t_h))
+                topo = topology_digest(mesh, "fft",
+                                       panels=dist_panel_space(n, p))
+                key = wisdom_key(n=n, dtype="complex64", p=p,
+                                 method="fpm-pad", backend=backend,
+                                 detail=partition_digest(d, pads),
+                                 topology=topo)
+                record_wisdom(wisdom_path, key, winner, mode="measure",
+                              time_s=float(t_best),
+                              extra={"origin": "kernel_microbench",
+                                     "topology": topo})
+        recs.append(rec)
+    return recs
+
+
 def run(quick: bool = False, out: str = DEFAULT_OUT,
         wisdom: str | None = None, sweeps: str | None = None) -> dict:
     radix_sizes = [64, 256] if quick else [64, 256, 1024]
@@ -333,6 +418,8 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
                                            wisdom_path=wisdom),
         "dist": lambda: bench_dist([64] if quick else [64, 128],
                                    wisdom_path=wisdom),
+        "hetero-dist": lambda: bench_hetero_dist(
+            [48] if quick else [48, 96], wisdom_path=wisdom),
     }
     chosen = (list(all_sweeps) if sweeps is None
               else [s.strip() for s in sweeps.split(",") if s.strip()])
@@ -368,8 +455,8 @@ def main() -> int:
                          "measured config (plan_pfft-compatible keys)")
     ap.add_argument("--sweeps", default=None,
                     help="comma-separated subset of "
-                         "radix,fused,segments,planner,schedule,dist "
-                         "(default: all)")
+                         "radix,fused,segments,planner,schedule,dist,"
+                         "hetero-dist (default: all)")
     args = ap.parse_args()
     run(quick=args.quick, out=args.out, wisdom=args.wisdom,
         sweeps=args.sweeps)

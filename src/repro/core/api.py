@@ -43,7 +43,7 @@ from repro.core.fpm import FPMSet
 from repro.core.partition import PartitionResult, lb_partition, partition_rows
 from repro.core.pfft import _pfft_limb
 from repro.plan.calibrate import fit_cost_params
-from repro.plan.config import PlanConfig
+from repro.plan.config import PlanConfig, normalize_pad
 from repro.plan.schedule import SegmentSchedule
 from repro.plan.tune import dist_panel_space, tune_dist_schedule, tune_schedule
 from repro.plan.wisdom import (lookup_wisdom, partition_digest, record_wisdom,
@@ -127,20 +127,11 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
     pad_strategy = _PAD_STRATEGY[method]
 
     def normalize(cfg: PlanConfig) -> PlanConfig:
-        """Force the method's pad semantics onto a config.
-
-        ``pad`` is semantics, not a tunable: the method owns it (PR-2's
-        executor applied the pad lengths regardless of ``config.pad``,
-        and the schedule executor consults the entry's pad to pick
-        czt-vs-crop, so an explicit ``PlanConfig()`` on fpm-czt must
-        still run Bluestein, not pad-and-crop garbage).  ``fused`` drops
-        with it on padded methods, like the legacy shim documents.
-        """
-        if cfg.pad == pad_strategy:
-            return cfg
-        return dataclasses.replace(
-            cfg, pad=pad_strategy,
-            fused=cfg.fused and pad_strategy == "none")
+        """The method owns the pad semantics: ``plan.config.normalize_pad``
+        (shared with the algorithm entry points in ``core.pfft``, so an
+        explicit ``PlanConfig()`` on fpm-czt still runs Bluestein and a
+        drifted ``pad="czt"`` on fpm-pad still runs the paper's crop)."""
+        return normalize_pad(cfg, pad_strategy)
 
     tuning: dict[str, Any] = {"mode": tune}
     if config is not None:
@@ -179,8 +170,12 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
                 schedule = SegmentSchedule.homogeneous(normalize(plan), n,
                                                        part.d, pads)
             if schedule is not None and mesh is not None:
-                # A distributed plan must lower to one SPMD program; a
-                # hand-edited or drifted entry that cannot is a miss.
+                # A distributed plan must lower to one SPMD program —
+                # heterogeneous mixes of the row-FFT variant group fine
+                # (device-group programs), but a hand-edited or drifted
+                # entry mixing program-level knobs is a miss.  The rows
+                # mapping is already guaranteed by matches() above
+                # (the even N/p split tiles every mesh).
                 from repro.core.pfft_dist import validate_spmd_schedule
                 try:
                     validate_spmd_schedule(schedule)
@@ -241,10 +236,18 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
     instead of the single-host limb: the wisdom key gains the mesh's
     ``topology_digest``, ``tune="measure"`` times finalists through the
     full all_to_all pipeline end to end on that mesh, and ``execute``
-    runs the distributed transform.  Requires ``method="lb"`` (SPMD
-    shards rows evenly; the FPM partitions express heterogeneity through
-    the ragged layout, which this planner path does not drive yet) and
-    N divisible by the mesh axis size.
+    runs the distributed transform.  N must divide by the mesh axis
+    size.  The padded FPM methods are planned too: SPMD shards rows
+    evenly (one abstract processor per device, N/p rows each), so the
+    FPMs drive *per-device pad lengths and execution variants* instead
+    of row counts — plain ``method="fpm"`` is rejected (on an even
+    split it would be byte-identical to ``"lb"``); heterogeneous picks
+    lower as device-group programs
+    (``repro.plan.groups``: per-shard ``lax.switch`` branches at the
+    schedule's max effective length, the program-level analog of the
+    ragged row layout) and persist under the same v3 topology keys.
+    ``method="fpm-pad"``/``"fpm-czt"`` require ``fpms`` covering
+    exactly the mesh axis (``fpms.p == p``).
 
     ``use_stockham=``/``fused=`` are deprecated shims for the pre-planner
     flag API (they build an explicit config, so tuning is skipped).
@@ -252,12 +255,6 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
     if tune not in ("off", "estimate", "measure"):
         raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
     if mesh is not None:
-        if method != "lb":
-            raise ValueError(
-                "plan_pfft(mesh=...) plans the SPMD pipeline, which shards "
-                f"rows evenly; method={method!r} is single-host only — use "
-                "method='lb' (pfft2_distributed expresses per-device "
-                "heterogeneity via ragged_row_layout instead)")
         mesh_p = int(mesh.shape[axis_name])
         if p is None:
             p = mesh_p
@@ -267,6 +264,18 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
         if n % p:
             raise ValueError(f"N={n} must be divisible by mesh axis "
                              f"{axis_name}={p}")
+        if method == "fpm":
+            raise ValueError(
+                "plan_pfft(mesh=...) shards rows evenly, so plain "
+                "method='fpm' would run byte-identically to method='lb' "
+                "(its FPMs can only influence the *row* split, which SPMD "
+                "fixes) — use method='lb', or 'fpm-pad'/'fpm-czt' for "
+                "FPM-driven per-device pads and execution variants")
+        if method != "lb" and fpms is not None and fpms.p != p:
+            raise ValueError(
+                f"plan_pfft(mesh=...) assigns one abstract processor per "
+                f"device: fpms covers {fpms.p} processors but the mesh "
+                f"axis {axis_name!r} has {p} devices")
     if use_stockham is not None or fused is not None:
         if config is not None:
             raise ValueError("pass either config= or the legacy flags "
@@ -291,7 +300,13 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
     else:
         if fpms is None:
             raise ValueError(f"method={method!r} requires fpms")
-        part = partition_rows(n, fpms, eps)
+        if mesh is not None:
+            # SPMD shards rows evenly — the FPMs drive per-device pad
+            # lengths and execution variants, not row counts (the
+            # device-group lowering's realisation of heterogeneity).
+            part = lb_partition(n, p)
+        else:
+            part = partition_rows(n, fpms, eps)
         if method == "fpm-pad":
             from repro.plan.pads import fpm_pad_lengths
             pads = fpm_pad_lengths(fpms, part.d, n)
@@ -310,8 +325,10 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
         from repro.core.pfft_dist import pfft2_distributed
 
         def raw(m):
-            return pfft2_distributed(m, mesh, axis_name,
-                                     config=schedule.anchor_config)
+            # The full schedule, not just its anchor config: this is what
+            # routes heterogeneous picks to the device-group program (and
+            # per-device FPM pad lengths to the uniform-length rule).
+            return pfft2_distributed(m, mesh, axis_name, schedule=schedule)
     else:
         def raw(m):
             return _pfft_limb(m, d, schedule=schedule)

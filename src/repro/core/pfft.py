@@ -26,7 +26,6 @@ The distributed (mesh / shard_map) versions live in ``repro.core.pfft_dist``.
 
 from __future__ import annotations
 
-import dataclasses
 import warnings
 
 import numpy as np
@@ -35,7 +34,7 @@ import jax.numpy as jnp
 from repro.core.fpm import FPMSet
 from repro.core.partition import PartitionResult, lb_partition, partition_rows
 from repro.fft.fft2d import fft_rows
-from repro.plan.config import PlanConfig
+from repro.plan.config import PlanConfig, normalize_pad
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = [
@@ -280,12 +279,16 @@ def pfft_fpm_pad(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
                  config: PlanConfig | None = None,
                  return_partition: bool = False):
     """PFFT-FPM-PAD (paper §III-D): PFFT-FPM + per-processor row padding
-    N -> N_padded_i determined from the FPMs (padded-signal DFT semantics)."""
+    N -> N_padded_i determined from the FPMs (padded-signal DFT semantics).
+
+    The method owns the pad strategy: any explicit ``config=`` is
+    normalized to ``pad="fpm"`` (``normalize_pad``, shared with
+    ``core.api``), so a drifted ``PlanConfig(pad="czt")`` still runs the
+    paper's padded-signal crop rather than Bluestein."""
     from repro.plan.pads import fpm_pad_lengths  # lazy: plan imports core
     n = m.shape[0]
     cfg = _coerce_config(config, "pfft_fpm_pad", use_stockham=use_stockham)
-    if config is None:
-        cfg = dataclasses.replace(cfg, pad="fpm")
+    cfg = normalize_pad(cfg, "fpm")
     part = partition_rows(n, fpms, eps)
     pads = fpm_pad_lengths(fpms, part.d, n)
     out = _pfft_limb(m, part.d, pad_lengths=pads, config=cfg)
@@ -295,6 +298,20 @@ def pfft_fpm_pad(m: jnp.ndarray, fpms: FPMSet, eps: float = 0.05, *,
 # ---------------------------------------------------------------------------
 # Beyond paper: exact N-point DFT at arbitrary (model-chosen) FFT length.
 # ---------------------------------------------------------------------------
+
+def _czt_chirp(n: int) -> np.ndarray:
+    """Bluestein chirp c_j = exp(-i*pi*(j^2 mod 2N)/N), j = 0..N-1.
+
+    Computed host-side (N is static): ``jnp.arange(n)`` is int32 under
+    the default x64-off config, so a traced ``j*j`` wraps for
+    j >= 46341 and the chirp — hence the "exact" transform — would be
+    silently wrong for every N > 46340.  ``np.int64`` squares stay exact
+    to N ~ 2^31, and the reduced residue (< 2N) keeps the float64 angle
+    small, which is the whole point of the mod-2N identity.
+    """
+    j = np.arange(n, dtype=np.int64)
+    return np.exp(-1j * np.pi * ((j * j) % (2 * n)) / n)
+
 
 def czt_dft(x: jnp.ndarray, m_fft: int | None = None) -> jnp.ndarray:
     """Exact N-point DFT along the last axis via Bluestein's chirp-Z trick.
@@ -309,9 +326,7 @@ def czt_dft(x: jnp.ndarray, m_fft: int | None = None) -> jnp.ndarray:
     if m_fft < 2 * n - 1:
         raise ValueError(f"m_fft={m_fft} < 2N-1={2 * n - 1}")
     ctype = jnp.result_type(x, jnp.complex64)
-    j = jnp.arange(n)
-    # exp(-i*pi*j^2/N); j^2 mod 2N keeps the argument small (exactness).
-    chirp = jnp.exp(-1j * jnp.pi * ((j * j) % (2 * n)) / n).astype(ctype)
+    chirp = jnp.asarray(_czt_chirp(n).astype(ctype))
     a = jnp.zeros(x.shape[:-1] + (m_fft,), ctype).at[..., :n].set(x * chirp)
     # Kernel b_j = conj(chirp)_{|j|}, wrapped for circular convolution.
     b = jnp.zeros(m_fft, ctype)

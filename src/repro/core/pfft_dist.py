@@ -29,6 +29,14 @@ Uneven (HPOPTA) distributions across *heterogeneous device groups* are
 realised block-ragged: the row axis is split into ``p`` equal SPMD shards,
 but the FPM distribution decides how many of each shard's rows are real
 work vs. masked padding; see ``ragged_row_layout``.
+
+Heterogeneous *execution variants* are realised as device-group programs
+(``repro.plan.groups``): a schedule whose entries pick different row-FFT
+variants lowers to one SPMD program whose local phase branches per shard
+via ``jax.lax.switch(jax.lax.axis_index(axis_name), ...)`` — one traced
+branch per distinct config, every device meeting the others at the same
+collectives, with the effective FFT length made uniform at the
+schedule's max entry length (see DESIGN.md §Device-group programs).
 """
 
 from __future__ import annotations
@@ -47,6 +55,8 @@ from repro.core.padding import pad_to_smooth
 from repro.core.pfft import czt_dft
 from repro.fft.fft2d import fft_rows, fft_rows_then_transpose
 from repro.plan.config import PlanConfig
+from repro.plan.groups import (DeviceGroupProgram, device_group_program,
+                               spmd_program_config)
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout",
@@ -84,10 +94,37 @@ def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
     return fft_rows(block, **kw)
 
 
+def _grouped_local_fft(axis_name: str, n: int, *, padded: str | None,
+                       pad_len: int, program: DeviceGroupProgram,
+                       backend: str | None):
+    """Per-shard branching row-FFT: one ``lax.switch`` branch per distinct
+    config, selected by this device's position along ``axis_name``.
+
+    Every device traces every branch (it is still one SPMD program) and
+    executes its own; collectives stay *outside* the switch, so devices
+    on different branches still meet at the same ``all_to_all``.  All
+    branches transform at the uniform ``pad_len`` and crop back to N
+    bins, so their output shapes — and the exchanged bin semantics —
+    agree (the uniform-length rule of ``repro.plan.groups``).
+    """
+    branches = [
+        functools.partial(_local_fft, n=n, padded=padded, pad_len=pad_len,
+                          config=cfg, backend=backend)
+        for cfg in program.configs]
+    groups = jnp.asarray(np.asarray(program.group_of_device, dtype=np.int32))
+
+    def fft(block: jnp.ndarray) -> jnp.ndarray:
+        gid = groups[jax.lax.axis_index(axis_name)]
+        return jax.lax.switch(gid, branches, block)
+
+    return fft
+
+
 def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
                  padded: str | None, pad_len: int, config: PlanConfig,
                  backend: str | None = None,
-                 pipeline_panels: int = 1) -> jnp.ndarray:
+                 pipeline_panels: int = 1,
+                 program: DeviceGroupProgram | None = None) -> jnp.ndarray:
     """One (row FFT -> distributed transpose) phase on a local block.
 
     block: (n_loc, N) — this device's rows.  Returns (n_loc, N): this
@@ -113,8 +150,14 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     paper's overlap lever, restated for collectives).  Panel results are
     re-interleaved so the output is bit-identical in layout to the
     monolithic phase.
+
+    ``program`` (a ``DeviceGroupProgram``) makes the local row-FFT branch
+    per shard — ``_grouped_local_fft``'s ``lax.switch`` over one traced
+    branch per distinct config — while the collective structure stays
+    uniform; heterogeneous schedules never take the fused path (the
+    grouped lowering rejects fused mixes eagerly).
     """
-    fused = config.fused and padded is None
+    fused = config.fused and padded is None and program is None
     if fused:
         # radix=2 means the pure-jnp Stockham elsewhere, not a kernel
         # radix: only an explicit radix-4 reaches the fused kernel.
@@ -124,13 +167,28 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
         # Transposed blocks exchange with the axis roles swapped.
         a2a_t = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
                                   split_axis=0, concat_axis=1, tiled=True)
-    fft = functools.partial(_local_fft, n=n, padded=padded, pad_len=pad_len,
-                            config=config, backend=backend)
+    if program is not None:
+        fft = _grouped_local_fft(axis_name, n, padded=padded,
+                                 pad_len=pad_len, program=program,
+                                 backend=backend)
+    else:
+        fft = functools.partial(_local_fft, n=n, padded=padded,
+                                pad_len=pad_len, config=config,
+                                backend=backend)
     a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
                             split_axis=1, concat_axis=0, tiled=True)
     n_loc = block.shape[0]
     k = pipeline_panels
-    if k <= 1 or n_loc % k:
+    if k > 1 and n_loc % k:
+        # Refuse the silent monolithic fallback: a direct caller (or
+        # tuner drift) would time/run a different program than the one
+        # requested.  pfft2_distributed validates divisibility before
+        # building the phase, so reaching this is a caller bug.
+        raise ValueError(
+            f"_local_phase: pipeline_panels={k} must divide local rows "
+            f"{n_loc}; refusing to silently run the monolithic phase "
+            "instead of the requested pipelined one")
+    if k <= 1:
         if fused:
             return a2a_t(fft_t(block))  # (N/p, N): a row-block of M^T
         return a2a(fft(block)).T
@@ -165,33 +223,25 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
 
 def validate_spmd_schedule(schedule: SegmentSchedule,
                            pad_len: int | None = None) -> PlanConfig:
-    """Eagerly reject schedules that cannot lower to one SPMD program.
+    """Eagerly reject schedules that genuinely cannot lower to one SPMD
+    program; return the schedule's *program config*.
 
-    Returns the schedule's common config on success.  Runs *before any
-    device work* — at plan-build time in ``make_pfft2_fn`` and at the top
-    of ``pfft2_distributed`` — so a heterogeneous schedule fails with the
-    schedule's own ``describe()`` instead of surfacing mid-trace inside
-    ``_local_phase`` after buffers are already placed.  Mixed effective
-    lengths are rejected only when no explicit ``pad_len`` overrides them
-    (SPMD runs one program, so the length must be uniform).
+    Heterogeneous schedules are no longer refused wholesale: per-device
+    row-FFT variants lower as a device-group program (one ``lax.switch``
+    branch per distinct config — ``repro.plan.groups``), and mixed
+    effective lengths lower under the uniform-length rule (every branch
+    transforms at the schedule's max entry length; an explicit
+    ``pad_len`` overrides it).  What still raises — before any device
+    work, at plan-build time in ``make_pfft2_fn`` and at the top of
+    ``pfft2_distributed``, with the schedule's own ``describe()`` in the
+    message — are mixes of the *program-level* knobs that shape the
+    collective structure: pad strategy, ``fused``, ``pipeline_panels``
+    (see ``repro.plan.groups.spmd_program_config``).  The returned
+    config is the common one, or the anchor of a groupable mix (its
+    program-level knobs are shared by every entry).
     """
-    config = schedule.common_config
-    if config is None:
-        raise ValueError(
-            "pfft2_distributed runs one SPMD program per device; the "
-            f"heterogeneous schedule [{schedule.describe()}] mixes "
-            "per-segment configs and cannot be lowered to shard_map — "
-            "pass its common config or use the single-host executor "
-            "(repro.core.pfft)")
-    lengths = {e.length for e in schedule}
-    if pad_len is None and len(lengths) > 1:
-        raise ValueError(
-            "pfft2_distributed runs one SPMD program per device; the "
-            f"schedule [{schedule.describe()}] has mixed effective lengths "
-            f"{sorted(lengths)} and cannot be lowered to shard_map — use "
-            "the single-host executor (repro.core.pfft) or pass pad_len "
-            "explicitly")
-    return config
+    del pad_len  # mixed lengths always lower now; kept for API compat
+    return spmd_program_config(schedule)
 
 
 def _coerce_dist_config(config: PlanConfig | None,
@@ -202,11 +252,12 @@ def _coerce_dist_config(config: PlanConfig | None,
                         pad_len: int | None = None) -> PlanConfig:
     """Fold the legacy loose kwargs into a ``PlanConfig`` (deprecated shims).
 
-    A ``schedule`` resolves to its common config: the SPMD local phase is
-    one program on every device, so only homogeneous schedules route here
-    (per-device heterogeneity is expressed through the ragged layout and
-    the FPM-chosen local ``pad_len``, not divergent programs);
-    ``validate_spmd_schedule`` raises eagerly otherwise.
+    A ``schedule`` resolves to its *program config* (the common config,
+    or the anchor of a heterogeneous-but-groupable mix — its shared
+    program-level knobs drive ``padded``/``pipeline_panels`` below);
+    ``validate_spmd_schedule`` raises eagerly for the mixes the grouped
+    lowering genuinely cannot express.  ``pfft2_distributed`` builds the
+    per-shard branching program itself (it knows the mesh size).
     """
     if schedule is not None:
         if config is not None:
@@ -234,7 +285,8 @@ def _coerce_dist_config(config: PlanConfig | None,
 
 def _resolve_dist_config(n: int, mesh: Mesh, axis_name: str, *, pad: str,
                          dtype, tune: str, wisdom: str | None,
-                         pad_len: int | None) -> tuple[PlanConfig, dict]:
+                         pad_len: int | None
+                         ) -> tuple[PlanConfig | SegmentSchedule, dict]:
     """Plan a raw ``pfft2_distributed`` call the way ``plan_pfft`` plans.
 
     Resolution order mirrors ``core.api._resolve_schedule``: wisdom hit
@@ -243,6 +295,9 @@ def _resolve_dist_config(n: int, mesh: Mesh, axis_name: str, *, pad: str,
     served from disk with zero re-measurement.  Keys use the method the
     pad strategy implies, so a ``plan_pfft(mesh=...)`` entry and a raw
     ``pfft2_distributed(tune=...)`` entry for the same problem coincide.
+    A wisdom hit that persisted a full ``SegmentSchedule`` (a grouped
+    pick included) is returned as the schedule, provided it still lowers
+    to this mesh; anything that doesn't is a miss, never an error.
     """
     from repro.plan.calibrate import fit_cost_params
     from repro.plan.tune import dist_panel_space, tune_dist_config
@@ -262,12 +317,23 @@ def _resolve_dist_config(n: int, mesh: Mesh, axis_name: str, *, pad: str,
         hit = lookup_wisdom(wisdom, key)
         if hit is not None:
             plan, entry = hit
-            cfg = (plan.common_config if isinstance(plan, SegmentSchedule)
-                   else plan)
-            if cfg is not None and cfg.pad == pad:
+            if isinstance(plan, SegmentSchedule):
+                # Served only when it still lowers to *this* mesh (a
+                # hand-edited or drifted entry that cannot is a miss)
+                # and its pad semantics match the requested strategy.
+                try:
+                    device_group_program(plan, p, pad_len=pad_len)
+                except ValueError:
+                    plan = None
+                if plan is not None and plan.n == n \
+                        and all(e.config.pad == pad for e in plan):
+                    tuning["source"] = "wisdom"
+                    tuning["wisdom_entry"] = entry
+                    return plan, tuning
+            elif plan.pad == pad:
                 tuning["source"] = "wisdom"
                 tuning["wisdom_entry"] = entry
-                return cfg, tuning
+                return plan, tuning
     if tune == "off":
         tuning["source"] = "off"
         return PlanConfig(pad=pad), tuning
@@ -286,6 +352,21 @@ def _resolve_dist_config(n: int, mesh: Mesh, axis_name: str, *, pad: str,
         record_wisdom(wisdom, key, cfg, mode="measure",
                       time_s=info["time_s"], extra=extra)
     return cfg, tuning
+
+
+def _resolve_dist_plan_kw(n: int, mesh: Mesh, axis_name: str, *,
+                          padded: str | None, dtype, tune: str,
+                          wisdom: str | None,
+                          pad_len: int | None) -> dict:
+    """``_resolve_dist_config`` shaped as executor kwargs: ``{"config":
+    cfg}`` or ``{"schedule": sched}`` — the one home of the
+    pad-vocabulary mapping and the plan/schedule dispatch shared by
+    ``pfft2_distributed`` and ``make_pfft2_fn``."""
+    plan, _ = _resolve_dist_config(
+        n, mesh, axis_name, pad=_PAD_FROM_PADDED[padded], dtype=dtype,
+        tune=tune, wisdom=wisdom, pad_len=pad_len)
+    key = "schedule" if isinstance(plan, SegmentSchedule) else "config"
+    return {key: plan}
 
 
 def pfft2_distributed(
@@ -313,10 +394,14 @@ def pfft2_distributed(
     pick carries to pods), and ``pipeline_panels=k`` overlaps each
     phase's all_to_all with compute by chunking the local rows into k
     software-pipelined panels (k must divide N/p; k=1 is the monolithic
-    phase).  ``schedule`` routes a planner ``SegmentSchedule`` here: the
-    local phase executes its entry's config (SPMD requires the schedule
-    to be homogeneous).  The loose ``use_stockham=``/``pipeline_panels=``
-    kwargs are deprecated shims.
+    phase).  ``schedule`` routes a planner ``SegmentSchedule`` here: a
+    homogeneous schedule executes its common config; a heterogeneous one
+    lowers to a *device-group program* — the local phase branches per
+    shard via ``lax.switch``, one traced branch per distinct config, at
+    the schedule's max effective length (``repro.plan.groups``; mixes of
+    pad/fused/pipeline_panels still raise the named SPMD error).  The
+    loose ``use_stockham=``/``pipeline_panels=`` kwargs are deprecated
+    shims.
 
     ``tune=``/``wisdom=`` plan the call when no explicit config/schedule
     is given: consult the per-topology wisdom store, tune on a miss
@@ -329,18 +414,20 @@ def pfft2_distributed(
     """
     if (tune != "off" or wisdom is not None) and config is None \
             and schedule is None:
-        pad = _PAD_FROM_PADDED[padded]
-        config, _ = _resolve_dist_config(
-            m.shape[0], mesh, axis_name, pad=pad, dtype=m.dtype,
+        resolved = _resolve_dist_plan_kw(
+            m.shape[0], mesh, axis_name, padded=padded, dtype=m.dtype,
             tune=tune, wisdom=wisdom, pad_len=pad_len)
+        config = resolved.get("config")
+        schedule = resolved.get("schedule")
     config = _coerce_dist_config(config, schedule, padded, use_stockham,
                                  pipeline_panels, pad_len)
     if schedule is not None and pad_len is None:
-        # The schedule's entries carry the FPM-chosen effective length —
-        # the very thing the planner picked; honor it rather than the
-        # model-free smooth default (uniformity was validated eagerly by
-        # validate_spmd_schedule inside _coerce_dist_config).
-        pad_len = int(next(iter({e.length for e in schedule})))
+        # The schedule's entries carry the FPM-chosen effective lengths —
+        # the very thing the planner picked; honor them rather than the
+        # model-free smooth default.  Mixed lengths lower under the
+        # uniform-length rule: every device transforms at the max (the
+        # program-level analog of ragged_row_layout — see plan.groups).
+        pad_len = max(e.length for e in schedule)
     padded = config.dist_padded
     panels = config.pipeline_panels
     n = m.shape[0]
@@ -352,12 +439,19 @@ def pfft2_distributed(
             f"pipeline_panels={panels} must divide local rows {n // p}")
     if pad_len is None:
         pad_len = default_dist_pad_len(n, padded)
+    program = None
+    if schedule is not None and schedule.common_config is None:
+        # Heterogeneous-but-groupable: lower to the device-group program
+        # (one lax.switch branch per distinct config).  Raises the named
+        # SPMD error when the entries cannot tile this mesh's shards.
+        program = device_group_program(schedule, int(p), pad_len=pad_len)
+        pad_len = program.pad_len  # the lowering owns the uniform length
 
     spec_rows = P(axis_name, None)
     phase = functools.partial(
         _local_phase, axis_name=axis_name, n=n, padded=padded,
         pad_len=pad_len, config=config, backend=backend,
-        pipeline_panels=panels)
+        pipeline_panels=panels, program=program)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,
@@ -375,22 +469,27 @@ def make_pfft2_fn(mesh: Mesh, n: int, axis_name: str = "fft", **kw):
     """jit-compiled distributed 2-D DFT closed over a mesh (sharded in/out).
 
     Planning happens *now*, not at first call: a ``schedule=`` is
-    SPMD-validated eagerly (build-time error with the schedule's
-    ``describe()``), and ``tune=``/``wisdom=`` resolve to a concrete
-    config before jit so measurement never runs inside a trace (the plan
-    is keyed for complex64 signals, the pipeline's working dtype).
+    SPMD-validated eagerly — a heterogeneous one is lowered against this
+    mesh's device count, so an ungroupable schedule is a build-time error
+    with the schedule's ``describe()`` — and ``tune=``/``wisdom=``
+    resolve to a concrete config before jit so measurement never runs
+    inside a trace (the plan is keyed for complex64 signals, the
+    pipeline's working dtype).
     """
     if kw.get("schedule") is not None:
-        validate_spmd_schedule(kw["schedule"], kw.get("pad_len"))
+        sched = kw["schedule"]
+        validate_spmd_schedule(sched, kw.get("pad_len"))
+        if sched.common_config is None:
+            device_group_program(sched, int(mesh.shape[axis_name]),
+                                 pad_len=kw.get("pad_len"))
     tune = kw.pop("tune", "off")
     wisdom = kw.pop("wisdom", None)
     if (tune != "off" or wisdom is not None) \
             and kw.get("config") is None and kw.get("schedule") is None:
-        pad = _PAD_FROM_PADDED[kw.get("padded")]
-        kw.pop("padded", None)
-        kw["config"], _ = _resolve_dist_config(
-            n, mesh, axis_name, pad=pad, dtype=np.complex64, tune=tune,
-            wisdom=wisdom, pad_len=kw.get("pad_len"))
+        kw.update(_resolve_dist_plan_kw(
+            n, mesh, axis_name, padded=kw.pop("padded", None),
+            dtype=np.complex64, tune=tune, wisdom=wisdom,
+            pad_len=kw.get("pad_len")))
     sharding = NamedSharding(mesh, P(axis_name, None))
     fn = functools.partial(pfft2_distributed, mesh=mesh, axis_name=axis_name, **kw)
     return jax.jit(fn, in_shardings=(sharding,), out_shardings=sharding)

@@ -3,40 +3,49 @@
 One selection point for every execution variant: ``PlanConfig`` names a
 variant, ``SegmentSchedule`` assigns one per segment (the heterogeneous
 generalisation — slow processors keep the library FFT while fast ones
-take the kernel), ``cost`` prices both from the FPMs plus structural
-counts, ``tune`` picks one (estimate = model only, measure = time the
-finalists; ``tune_schedule`` prices per distinct effective FFT length),
+take the kernel), ``groups`` lowers heterogeneous schedules to
+single-SPMD device-group programs for the distributed pipeline,
+``cost`` prices all of it from the FPMs plus structural counts,
+``tune`` picks one (estimate = model only, measure = time the
+finalists; ``tune_schedule`` prices per distinct effective FFT length,
+``tune_dist_schedule`` races grouped finalists end to end on a mesh),
 ``wisdom`` persists the choice per (n, dtype, p, method, backend),
 ``calibrate`` fits the cost constants back from measured wisdom, and
 ``pads`` holds the shared FPM pad/CZT-length selection.  The user entry
 point is ``repro.core.api.plan_pfft(tune=..., wisdom=...)``.
 """
 
-from repro.plan.config import PlanConfig
+from repro.plan.config import PlanConfig, normalize_pad
 from repro.plan.schedule import SegmentPlan, SegmentSchedule
+from repro.plan.groups import (DeviceGroupProgram, device_group_program,
+                               spmd_program_config)
 from repro.plan.pads import czt_fft_lengths, fpm_pad_lengths
 from repro.plan.cost import (CostParams, dist_comm_bytes, estimate_cost,
-                             estimate_schedule_cost, phase_dispatch_count)
+                             estimate_grouped_cost, estimate_schedule_cost,
+                             phase_dispatch_count)
 from repro.plan.wisdom import (WISDOM_VERSION, load_wisdom, lookup_wisdom,
                                partition_digest, record_wisdom,
                                topology_digest, wisdom_key)
 from repro.plan.tune import (candidate_configs, dist_panel_space,
-                             measure_configs, measure_dist_configs,
+                             grouped_dist_schedule, measure_configs,
+                             measure_dist_configs,
                              segment_candidate_configs, tune_config,
                              tune_dist_config, tune_dist_schedule,
                              tune_schedule)
 from repro.plan.calibrate import fit_cost_params
 
 __all__ = [
-    "PlanConfig",
+    "PlanConfig", "normalize_pad",
     "SegmentPlan", "SegmentSchedule",
+    "DeviceGroupProgram", "device_group_program", "spmd_program_config",
     "czt_fft_lengths", "fpm_pad_lengths",
     "CostParams", "dist_comm_bytes", "estimate_cost",
-    "estimate_schedule_cost", "phase_dispatch_count",
+    "estimate_grouped_cost", "estimate_schedule_cost",
+    "phase_dispatch_count",
     "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "partition_digest",
     "record_wisdom", "topology_digest", "wisdom_key",
-    "candidate_configs", "dist_panel_space", "measure_configs",
-    "measure_dist_configs", "segment_candidate_configs",
+    "candidate_configs", "dist_panel_space", "grouped_dist_schedule",
+    "measure_configs", "measure_dist_configs", "segment_candidate_configs",
     "tune_config", "tune_dist_config", "tune_dist_schedule", "tune_schedule",
     "fit_cost_params",
 ]

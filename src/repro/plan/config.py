@@ -32,7 +32,7 @@ PadStrategy = Literal["none", "fpm", "czt"]
 _VALID_RADIX = (None, 2, 4)
 _VALID_PAD = ("none", "fpm", "czt")
 
-__all__ = ["PlanConfig", "PadStrategy"]
+__all__ = ["PlanConfig", "PadStrategy", "normalize_pad"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,3 +115,21 @@ class PlanConfig:
         if self.pipeline_panels > 1:
             parts.append(f"panels={self.pipeline_panels}")
         return ",".join(parts)
+
+
+def normalize_pad(config: PlanConfig, pad: str) -> PlanConfig:
+    """Force a method's pad semantics onto a config.
+
+    ``pad`` is semantics, not a tunable: the method owns it (the schedule
+    executor consults the entry's pad to pick czt-vs-crop, so an explicit
+    ``PlanConfig(pad="czt")`` handed to PFFT-FPM-PAD must still run the
+    paper's padded-signal crop, not Bluestein — and vice versa).
+    ``fused`` drops with it on padded methods: fused phases have no
+    per-segment padding.  The single home of the rule — ``core.api`` and
+    the algorithm entry points (``core.pfft``) both normalize through it,
+    so their pad semantics can never drift apart again.
+    """
+    if config.pad == pad:
+        return config
+    return dataclasses.replace(
+        config, pad=pad, fused=config.fused and pad == "none")

@@ -35,7 +35,8 @@ from repro.plan.config import PlanConfig
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["CostParams", "dist_comm_bytes", "estimate_cost",
-           "estimate_schedule_cost", "phase_dispatch_count"]
+           "estimate_grouped_cost", "estimate_schedule_cost",
+           "phase_dispatch_count"]
 
 _COMPLEX64_BYTES = 8
 # Bluestein computes one N-point DFT as ~3 length-m FFTs (forward, kernel
@@ -245,3 +246,30 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
         phase += (k - 1) * params.dispatch_overhead_s
 
     return 2.0 * (phase + comm)
+
+
+def estimate_grouped_cost(schedule: SegmentSchedule, *,
+                          fpms: FPMSet | None = None,
+                          params: CostParams | None = None,
+                          comm_bytes: float = 0.0) -> float:
+    """Predicted seconds for a schedule lowered as a *device-group program*
+    (``repro.plan.groups``): the per-group makespan of
+    ``estimate_schedule_cost`` plus the switch-dispatch overhead.
+
+    The grouped SPMD program traces one ``lax.switch`` branch per
+    distinct config, so each phase carries the branch bodies of every
+    group through compilation and dispatch — modelled as one extra
+    dispatch overhead per extra branch per phase.  The makespan itself is
+    the shared per-entry formula (each segment priced with its own FPM
+    ``time_at`` and its own entry's backend multiplier), so the
+    grouped-vs-homogeneous comparison in ``tune_dist_schedule`` differs
+    from the single-host one only by this term.
+    """
+    if params is None:
+        params = CostParams.for_backend()
+    base = estimate_schedule_cost(schedule, fpms=fpms, params=params,
+                                  comm_bytes=comm_bytes)
+    branches = len(schedule.configs)
+    if branches > 1:
+        base += 2.0 * (branches - 1) * params.dispatch_overhead_s
+    return base

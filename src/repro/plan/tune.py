@@ -28,13 +28,13 @@ from repro.core.fpm import FPMSet
 from repro.plan.config import PlanConfig
 from repro.plan.cost import (CostParams, _compute_multiplier, _segment_work,
                              dist_comm_bytes, estimate_cost,
-                             estimate_schedule_cost)
+                             estimate_grouped_cost, estimate_schedule_cost)
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["candidate_configs", "segment_candidate_configs",
            "measure_configs", "measure_dist_configs", "tune_config",
            "tune_schedule", "tune_dist_config", "tune_dist_schedule",
-           "dist_panel_space"]
+           "grouped_dist_schedule", "dist_panel_space"]
 
 
 def _is_pow2(n: int) -> bool:
@@ -411,12 +411,19 @@ def tune_schedule(n: int, *, d=None, pad_lengths=None,
 
 # --------------------------------------------------------------- distributed
 
-def dist_panel_space(n: int, p: int, max_panels: int = 4) -> tuple[int, ...]:
+def dist_panel_space(n: int, p: int, max_panels: int = 8) -> tuple[int, ...]:
     """Candidate ``pipeline_panels`` for an n x n problem on p devices:
     the powers of two up to ``max_panels`` that divide the local row count
     (``pfft2_distributed`` requires k | N/p).  The one home of the rule —
     the tuner, ``plan_pfft(mesh=...)``, and the microbench all enumerate
-    (and digest) the same space."""
+    (and digest) the same space.
+
+    ``max_panels`` defaults to 8 so the full ``(1, 2, 4, 8)`` literal is
+    reachable (it used to be silently capped at 4, making the 8-panel
+    candidate dead code).  The panel space is part of the topology
+    digest, so stores tuned under the old cap simply re-tune: a
+    different candidate space is a different tuning experiment.
+    """
     if p <= 0 or n % p:
         return (1,)
     n_loc = n // p
@@ -445,10 +452,11 @@ def _measure_local_phase(cfg: PlanConfig, n: int, p: int, pad_len: int,
     return min(_timed_min([(cfg, fn)], x, rounds).values())
 
 
-def measure_dist_configs(configs: Sequence[PlanConfig], n: int, mesh,
-                         axis_name: str = "fft", *, pad_len: int | None = None,
-                         dtype=np.complex64, rounds: int = 3
-                         ) -> dict[PlanConfig, float]:
+def measure_dist_configs(configs: Sequence[PlanConfig | SegmentSchedule],
+                         n: int, mesh, axis_name: str = "fft", *,
+                         pad_len: int | None = None, dtype=np.complex64,
+                         rounds: int = 3
+                         ) -> dict[PlanConfig | SegmentSchedule, float]:
     """End-to-end on-device seconds of ``pfft2_distributed`` per config.
 
     Unlike ``measure_configs`` (which times the single-host limb and so
@@ -458,6 +466,12 @@ def measure_dist_configs(configs: Sequence[PlanConfig], n: int, mesh,
     per-config-min harness (``_timed_min``); the input is laid out
     row-sharded over ``axis_name`` first so placement cost is not billed
     to whichever config runs first.
+
+    Items may be ``PlanConfig``s *or* ``SegmentSchedule``s —
+    ``tune_dist_schedule`` races assembled heterogeneous (device-group)
+    schedules against homogeneous finalists in one pot; a schedule runs
+    with its own entry lengths (the uniform-length rule), so ``pad_len``
+    applies only to bare configs.
     """
     import jax
     import jax.numpy as jnp
@@ -469,12 +483,15 @@ def measure_dist_configs(configs: Sequence[PlanConfig], n: int, mesh,
                      + 1j * rng.standard_normal((n, n))).astype(dtype))
     x = jax.device_put(x, NamedSharding(mesh, P(axis_name, None)))
     pairs = []
-    for cfg in configs:
+    for item in configs:
+        if isinstance(item, SegmentSchedule):
+            kw = {"schedule": item}
+        else:
+            kw = {"config": item, "pad_len": pad_len}
         fn = jax.jit(functools.partial(pfft2_distributed, mesh=mesh,
-                                       axis_name=axis_name, config=cfg,
-                                       pad_len=pad_len))
+                                       axis_name=axis_name, **kw))
         jax.block_until_ready(fn(x))  # compile
-        pairs.append((cfg, fn))
+        pairs.append((item, fn))
     return _timed_min(pairs, x, rounds)
 
 
@@ -581,21 +598,124 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
     return winner, info
 
 
-def tune_dist_schedule(n: int, mesh, axis_name: str = "fft", *,
-                       pad_lengths=None, **kw
-                       ) -> tuple[SegmentSchedule, dict]:
-    """Schedule-shaped view of ``tune_dist_config``.
+def grouped_dist_schedule(n: int, p: int, *, pad_lengths=None,
+                          fpms: FPMSet | None = None, pad: str = "none",
+                          params: CostParams | None = None
+                          ) -> SegmentSchedule | None:
+    """The model-driven heterogeneous candidate for a p-device mesh.
 
-    SPMD runs one program per device, so the distributed schedule is by
-    construction homogeneous over the even N/p row split; this wrapper
-    exists so ``plan_pfft(mesh=...)`` resolves through the same
-    ``SegmentSchedule`` plumbing (wisdom persistence, ``PfftPlan.schedule``)
-    as the single-host path.
+    One entry per device (N/p rows — the SPMD shard), each assigned the
+    ``segment_candidate_configs`` argmin of *its own* predicted time:
+    its FPM's ``time_at`` (or the nominal flop rate) at its own declared
+    effective length, times the candidate's backend multiplier.  Mixed
+    per-device pad lengths are what make the assignment genuinely mixed
+    — a pow2-padded device's kernel candidates survive ``_factor_term``
+    while a non-pow2 neighbour falls back to the library FFT — exactly
+    how the single-host ``tune_schedule`` grows heterogeneity.  Returns
+    ``None`` when the assembly degenerates to a single config (nothing
+    to group) or p <= 1; the caller prices the survivor with
+    ``estimate_grouped_cost`` (the lowering runs every branch at the max
+    length — the declared-length estimate is the model's view of *why*
+    each device picked its variant, not of the padded flops).
+    """
+    if p <= 1 or n % p:
+        return None
+    if params is None:
+        params = CostParams.for_backend()
+    if fpms is not None and fpms.p != p:
+        fpms = None  # one abstract processor per device or no FPM at all
+    n_loc = n // p
+    d = np.full(p, n_loc, dtype=np.int64)
+
+    def seg_time(i: int, cfg: PlanConfig, length: int) -> float:
+        if fpms is not None:
+            t = fpms[i].time_at(n_loc, length)
+        else:
+            from repro.core.fpm import fft_flops
+            t = float(fft_flops(n_loc, length)) / params.nominal_flops
+        return t * _compute_multiplier(cfg, length, params)
+
+    cfgs = []
+    for i in range(p):
+        length = n
+        if pad_lengths is not None and int(pad_lengths[i]) > n:
+            length = int(pad_lengths[i])
+        cands = segment_candidate_configs(length, pad=pad)
+        cfgs.append(min(cands, key=lambda c: seg_time(i, c, length)))
+    schedule = SegmentSchedule.from_parts(n, d, pad_lengths, cfgs)
+    return schedule if len(schedule.configs) > 1 else None
+
+
+def tune_dist_schedule(n: int, mesh, axis_name: str = "fft", *,
+                       pad_lengths=None, mode: str = "estimate",
+                       pad: str = "none", pad_len: int | None = None,
+                       fpms: FPMSet | None = None,
+                       params: CostParams | None = None, top_k: int = 3,
+                       panels: Sequence[int] | None = None,
+                       dtype=np.complex64, reps: int = 3
+                       ) -> tuple[SegmentSchedule, dict]:
+    """Schedule-shaped distributed tuner; returns (schedule, info).
+
+    The homogeneous candidate space is ``tune_dist_config``'s (comm term
+    from the mesh, measure mode racing finalists end to end).  On top of
+    it the tuner *grows heterogeneous candidates*: the per-device
+    assembly of ``grouped_dist_schedule`` — lowered by the executor as a
+    device-group program (``repro.plan.groups``) — priced with
+    ``estimate_grouped_cost`` (per-group makespan + switch-dispatch
+    overhead) against the homogeneous winner.  ``mode="measure"`` races
+    the grouped finalist against the homogeneous winner end to end
+    through the *actual* grouped ``pfft2_distributed`` program on the
+    caller's mesh (``info["grouped_measured"]``), so a genuinely
+    heterogeneous pod's mixed pick is chosen on evidence, not model
+    faith.  This is what ``plan_pfft(mesh=...)`` resolves through, so
+    grouped picks persist under the same v3 topology keys.
     """
     p = int(mesh.shape[axis_name])
-    cfg, info = tune_dist_config(n, mesh, axis_name, **kw)
+    if pad_len is None and pad_lengths is not None:
+        # The returned schedule executes at the uniform max effective
+        # length (pfft2_distributed's uniform-length rule), so the
+        # homogeneous finalists must be raced — and the comm sample
+        # taken — at that very length, not the unpadded/smooth default:
+        # a measured time for a program the plan never runs would poison
+        # the wisdom entry and the interconnect calibration.
+        lengths = [int(x) for x in pad_lengths if int(x) > n]
+        if lengths:
+            pad_len = max(lengths)
+    cfg, info = tune_dist_config(n, mesh, axis_name, mode=mode, pad=pad,
+                                 pad_len=pad_len, fpms=fpms, params=params,
+                                 top_k=top_k, panels=panels, dtype=dtype,
+                                 reps=reps)
+    if params is None:
+        params = CostParams.for_backend()
     d = np.full(p, n // p, dtype=np.int64) if p > 0 else None
-    schedule = SegmentSchedule.homogeneous(cfg, n, d, pad_lengths)
-    info["chosen"] = "homogeneous"
-    info["schedule"] = schedule.to_dict()
-    return schedule, info
+    homo = SegmentSchedule.homogeneous(cfg, n, d, pad_lengths)
+    hetero = grouped_dist_schedule(n, p, pad_lengths=pad_lengths, fpms=fpms,
+                                   pad=pad, params=params)
+    if hetero is None:
+        info["chosen"] = "homogeneous"
+        info["schedule"] = homo.to_dict()
+        return homo, info
+
+    fpms_dev = fpms if fpms is not None and fpms.p == p else None
+    comm_bytes = dist_comm_bytes(n, p)
+    est_hetero = estimate_grouped_cost(hetero, fpms=fpms_dev, params=params,
+                                       comm_bytes=comm_bytes)
+    est_homo = estimate_grouped_cost(homo, fpms=fpms_dev, params=params,
+                                     comm_bytes=comm_bytes)
+    info["heterogeneous"] = {"schedule": hetero.to_dict(),
+                             "est_s": float(est_hetero)}
+    info["homogeneous"] = {"config": cfg.to_dict(), "est_s": float(est_homo)}
+
+    if mode == "estimate" or "measure_fallback" in info:
+        winner = hetero if est_hetero < est_homo else homo
+    else:
+        raced = measure_dist_configs([homo, hetero], n, mesh, axis_name,
+                                     dtype=dtype, rounds=reps)
+        winner = min(raced, key=raced.get)
+        info["grouped_measured"] = [(s.describe(), float(t))
+                                    for s, t in raced.items()]
+        info["time_s"] = float(raced[winner])
+    info["chosen"] = ("heterogeneous" if len(winner.configs) > 1
+                      else "homogeneous")
+    info["schedule"] = winner.to_dict()
+    return winner, info

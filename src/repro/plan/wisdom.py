@@ -19,7 +19,12 @@ predate schedules and are treated as whole-file misses.
 Schema v3 adds *per-topology* keys for distributed plans: a key may end
 in ``|topo=<topology_digest>`` (device count, mesh axis name, platform,
 candidate pipeline-panel counts), so a plan measured end-to-end on a
-4-device mesh is never served to an 8-device one.  v2 files keep being
+4-device mesh is never served to an 8-device one.  Heterogeneous
+*device-group* picks (``repro.plan.groups``) need no bump of their own:
+they are ordinary ``SegmentSchedule`` values under the same topo keys —
+the v2 schedule wire format already round-trips them; serving-side
+validation (does the stored schedule still lower to *this* mesh?) lives
+with the lookup callers, never in the store.  v2 files keep being
 served for *single-host* keys (their entry schema is unchanged), but any
 ``topo=`` lookup against a v2 file is a miss: v2 predates distributed
 measurement, so whatever a v2 store claims about a topology key was not

@@ -1,0 +1,273 @@
+"""Device-group SPMD programs — grouped lowering of heterogeneous schedules.
+
+The acceptance story (ISSUE 5): a genuinely heterogeneous
+``SegmentSchedule`` (>= 2 distinct configs) executes through
+``pfft2_distributed`` on the forced-4-device rig and matches the
+reference transform; a grouped measured pick round-trips through v3
+wisdom and is served with zero re-measurement; the named SPMD error
+remains only for schedules the grouped lowering genuinely cannot
+express.  In-process tests cover the pure mapping logic
+(``plan.groups``) and the grouped cost/tuner plumbing.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.plan import (CostParams, PlanConfig, SegmentSchedule,
+                        device_group_program, estimate_grouped_cost,
+                        estimate_schedule_cost, grouped_dist_schedule,
+                        spmd_program_config)
+
+
+# ------------------------------------------------------------ the mapping
+
+def _sched(n, d, pads, cfgs):
+    return SegmentSchedule.from_parts(n, d, pads, cfgs)
+
+
+def test_device_group_program_maps_contiguous_groups():
+    sched = _sched(32, [16, 8, 8], None,
+                   [PlanConfig(), PlanConfig(radix=2), PlanConfig(radix=2)])
+    prog = device_group_program(sched, 4)
+    assert prog.configs == (PlanConfig(), PlanConfig(radix=2))
+    assert prog.group_of_device == (0, 0, 1, 1)  # 16 rows = 2 shards
+    assert prog.pad_len == 32
+    assert "radix=2" in prog.describe()
+
+
+def test_device_group_program_dedups_nonadjacent_configs():
+    """Non-adjacent entries with the same config share one traced branch
+    — the switch has one branch per *distinct* config, not per entry."""
+    a, b = PlanConfig(), PlanConfig(radix=2)
+    sched = _sched(32, [8, 8, 8, 8], None, [a, b, a, b])
+    prog = device_group_program(sched, 4)
+    assert prog.configs == (a, b)
+    assert prog.group_of_device == (0, 1, 0, 1)
+
+
+def test_device_group_program_uniform_length_rule():
+    sched = _sched(48, [24, 24], np.array([64, 96]),
+                   [PlanConfig(pad="fpm"), PlanConfig(radix=2, pad="fpm")])
+    assert device_group_program(sched, 2).pad_len == 96  # max entry length
+    assert device_group_program(sched, 2, pad_len=128).pad_len == 128
+
+
+def test_device_group_program_rejections():
+    # rows that don't tile the equal shards
+    with pytest.raises(ValueError, match="SPMD"):
+        device_group_program(
+            _sched(32, [12, 20], None, [PlanConfig(), PlanConfig(radix=2)]),
+            4)
+    # partial coverage: some device would have no branch
+    partial = SegmentSchedule(n=32, entries=(
+        SegmentSchedule.from_parts(
+            32, [16], None, [PlanConfig()]).entries[0],))
+    with pytest.raises(ValueError, match="no branch"):
+        device_group_program(partial, 4)
+    # indivisible mesh
+    with pytest.raises(ValueError, match="divisible"):
+        device_group_program(
+            _sched(32, [16, 16], None, [PlanConfig(), PlanConfig(radix=2)]),
+            3)
+
+
+def test_spmd_program_config_knob_rules():
+    """Only the local row-FFT variant may differ; the knobs that shape
+    the collective structure must be uniform."""
+    ok = _sched(32, [16, 16], None, [PlanConfig(), PlanConfig(radix=2)])
+    assert spmd_program_config(ok) == PlanConfig()  # anchor: tied rows,
+    # first-appearance order wins via max()
+    with pytest.raises(ValueError, match="SPMD"):
+        spmd_program_config(_sched(
+            32, [16, 16], None,
+            [PlanConfig(radix=4, fused=True), PlanConfig()]))
+    with pytest.raises(ValueError, match="SPMD"):
+        spmd_program_config(_sched(
+            32, [16, 16], None,
+            [PlanConfig(pipeline_panels=2), PlanConfig(radix=2)]))
+    with pytest.raises(ValueError, match="SPMD"):
+        spmd_program_config(_sched(
+            32, [16, 16], np.array([64, 64]),
+            [PlanConfig(pad="fpm"), PlanConfig(pad="czt")]))
+
+
+# ------------------------------------------------------------ grouped cost
+
+def test_estimate_grouped_cost_adds_switch_overhead():
+    params = CostParams.for_backend("cpu")
+    homo = SegmentSchedule.homogeneous(PlanConfig(), 32, [16, 16])
+    hetero = _sched(32, [16, 16], None, [PlanConfig(), PlanConfig(radix=2)])
+    assert estimate_grouped_cost(homo, params=params) \
+        == estimate_schedule_cost(homo, params=params)
+    extra = estimate_grouped_cost(hetero, params=params) \
+        - estimate_schedule_cost(hetero, params=params)
+    # one extra branch, two phases
+    assert extra == pytest.approx(2.0 * params.dispatch_overhead_s)
+
+
+def test_grouped_dist_schedule_mixed_lengths_yield_mixed_configs():
+    """Accelerator constants + mixed pow2/non-pow2 per-device pads: the
+    pow2-padded devices take a kernel variant while the rest keep the
+    library FFT — the candidate is genuinely heterogeneous."""
+    params = CostParams.for_backend("tpu")
+    pads = np.array([48, 64, 48, 64])
+    sched = grouped_dist_schedule(48, 4, pad_lengths=pads, pad="fpm",
+                                  params=params)
+    assert sched is not None and len(sched.configs) == 2
+    by_index = {e.index: e for e in sched}
+    assert by_index[0].config.fft_backend == "xla"       # 48: no kernel
+    assert by_index[1].config.fft_backend != "xla"       # 64: kernel wins
+    # uniform lengths (or a homogeneous argmin) degenerate to None
+    assert grouped_dist_schedule(48, 4, pad_lengths=None, pad="none",
+                                 params=params) is None
+    assert grouped_dist_schedule(48, 1, pad_lengths=pads, pad="fpm",
+                                 params=params) is None  # p=1: nothing to group
+
+
+# --------------------------------------- the 4-device grouped acceptance
+
+_GROUPED_SCRIPT = r"""
+import dataclasses, json
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.device_count()
+from repro.core import FPMSet, SpeedFunction, plan_pfft
+from repro.core.pfft_dist import make_pfft2_fn, pfft2_distributed
+from repro.launch.mesh import make_fft_mesh
+from repro.plan import (CostParams, PlanConfig, SegmentSchedule,
+                        record_wisdom, tune_dist_schedule)
+import repro.plan.tune as tune_mod
+
+W = "WISDOM_PATH"
+mesh = make_fft_mesh()  # 4x 'fft'
+n = 48
+n_loc = n // 4
+rng = np.random.default_rng(7)
+m = jnp.asarray((rng.standard_normal((n, n))
+                 + 1j * rng.standard_normal((n, n))).astype(np.complex64))
+ref = jnp.fft.fft2(m)
+
+# 1. a genuinely heterogeneous grouped schedule (2 distinct configs)
+#    executes through pfft2_distributed and matches the reference DFT
+hetero = SegmentSchedule.from_parts(
+    n, [n_loc * 2, n_loc, n_loc], None,
+    [PlanConfig(), PlanConfig(radix=2), PlanConfig(radix=2)])
+assert len(hetero.configs) == 2
+out = pfft2_distributed(m, mesh, "fft", schedule=hetero)
+assert float(jnp.max(jnp.abs(out - ref))) < 1e-2, "grouped vs fft2"
+
+# ... under jit (build-time lowering), and software-pipelined
+fn = make_pfft2_fn(mesh, n, schedule=hetero)
+assert float(jnp.max(jnp.abs(fn(m) - ref))) < 1e-2, "grouped jit"
+panels = SegmentSchedule.from_parts(
+    n, [n // 2, n // 2], None,
+    [PlanConfig(pipeline_panels=2), PlanConfig(radix=2, pipeline_panels=2)])
+outp = pfft2_distributed(m, mesh, "fft", schedule=panels)
+assert float(jnp.max(jnp.abs(outp - ref))) < 1e-2, "grouped pipelined"
+
+# ... grouped czt stays exact at mixed declared lengths (uniform max)
+czt = SegmentSchedule.from_parts(
+    n, [n // 2, n // 2], np.array([128, 256]),
+    [PlanConfig(pad="czt"), PlanConfig(pad="czt", batched=False)])
+outc = pfft2_distributed(m, mesh, "fft", schedule=czt)
+assert float(jnp.max(jnp.abs(outc - ref))) < 1e-2, "grouped czt"
+
+# 2. the grown heterogeneous candidate is raced end-to-end in measure
+#    mode (constants favor the pure-jnp radix-2 kernel on pow2 pads so
+#    the race stays cheap on this CPU rig)
+params = dataclasses.replace(
+    CostParams.for_backend("cpu"),
+    backend_factor={"xla": 1.0, "stockham": 0.5, "pallas": 300.0})
+xs = np.array(sorted({1, n_loc, n}))
+ys = np.array(sorted({n, 64, 128}))
+fast = np.tile([1e9, 4e9, 1e9], (len(xs), 1))
+slow = np.full((len(xs), len(ys)), 2.5e8)
+fpms = FPMSet([SpeedFunction(xs, ys, slow if i == 0 else fast,
+                             name=f"P{i}") for i in range(4)])
+pads = np.array([n, 64, 64, 64])
+sched, info = tune_dist_schedule(n, mesh, "fft", mode="measure", pad="fpm",
+                                 pad_lengths=pads, fpms=fpms, params=params,
+                                 reps=1)
+assert "grouped_measured" in info, sorted(info)
+assert len(info["grouped_measured"]) == 2, info["grouped_measured"]
+assert info["heterogeneous"]["est_s"] > 0
+
+# 3. a grouped measured pick persists under the v3 topo key and is
+#    served back with ZERO re-measurement, then executes correctly
+p1 = plan_pfft(n, fpms=fpms, method="fpm-pad", mesh=mesh, tune="estimate",
+               wisdom=W)
+key = p1.tuning["wisdom_key"]
+assert "|topo=4xfft.cpu" in key, key
+plan_pads = p1.pad_lengths
+grouped_pick = SegmentSchedule.from_parts(
+    n, [n_loc] * 4, plan_pads,
+    [PlanConfig(pad="fpm") if int(plan_pads[i]) <= n
+     else PlanConfig(radix=2, pad="fpm") for i in range(4)])
+assert len(grouped_pick.configs) == 2, grouped_pick.describe()
+record_wisdom(W, key, grouped_pick, mode="measure", time_s=1e-3)
+assert json.load(open(W))["version"] == 3
+
+def no_measure(*a, **kw):
+    raise AssertionError("re-measured on a warm store")
+tune_mod.measure_dist_configs = no_measure
+tune_mod._measure_local_phase = no_measure
+p2 = plan_pfft(n, fpms=fpms, method="fpm-pad", mesh=mesh, tune="measure",
+               wisdom=W)
+assert p2.tuning["source"] == "wisdom", p2.tuning["source"]
+assert p2.schedule == grouped_pick
+L = max(int(x) for x in plan_pads)
+def crop_phase(mat):
+    if L > n:
+        mat = jnp.pad(mat, ((0, 0), (0, L - n)))
+    return jnp.fft.fft(mat, axis=-1)[:, :n]
+ref_pad = crop_phase(crop_phase(m).T).T
+assert float(jnp.max(jnp.abs(p2.execute(m) - ref_pad))) < 1e-2, "served"
+
+# 4. the raw entry point serves the same grouped schedule
+out_raw = pfft2_distributed(m, mesh, "fft", padded="crop", wisdom=W,
+                            pad_len=None, tune="off")
+# (raw call has no FPM partition context: it looks up the lb-keyed entry,
+# which this store does not hold -> default config; just check it runs)
+assert out_raw.shape == (n, n)
+
+# 5. what genuinely cannot lower still raises the named SPMD error
+try:
+    pfft2_distributed(m, mesh, "fft", schedule=SegmentSchedule.from_parts(
+        n, [n // 2, n // 2], None,
+        [PlanConfig(radix=4, fused=True), PlanConfig()]))
+    raise SystemExit("expected the named SPMD error for a fused mix")
+except ValueError as e:
+    assert "SPMD" in str(e)
+print("DIST_GROUPS_OK")
+"""
+
+
+def test_grouped_schedule_4_devices(dist_subprocess, tmp_path):
+    script = _GROUPED_SCRIPT.replace(
+        "WISDOM_PATH", str(tmp_path / "wisdom.json"))
+    dist_subprocess(script, devices=4, sentinel="DIST_GROUPS_OK")
+
+
+# ------------------------------------------- in-process multi-device rig
+
+@pytest.mark.multi_device
+def test_grouped_schedule_inprocess_on_forced_topology():
+    """Runs under the CI dist job's REPRO_FORCE_DEVICES=4 (or any forced
+    multi-device topology): the grouped program executes in-process and
+    matches the homogeneous result bit-for-tolerance."""
+    from repro.core.pfft_dist import pfft2_distributed
+
+    p = min(jax.device_count(), 4)
+    mesh = jax.make_mesh((p,), ("fft",))
+    n = 16 * p
+    rng = np.random.default_rng(2)
+    m = jnp.asarray((rng.standard_normal((n, n))
+                     + 1j * rng.standard_normal((n, n))).astype(np.complex64))
+    cfgs = [PlanConfig() if i < p // 2 else PlanConfig(radix=2)
+            for i in range(p)]
+    sched = SegmentSchedule.from_parts(n, [n // p] * p, None, cfgs)
+    assert len(sched.configs) == 2
+    out = pfft2_distributed(m, mesh, "fft", schedule=sched)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.fft.fft2(m)),
+                               atol=1e-2)

@@ -57,12 +57,21 @@ def test_topology_digest_from_mesh():
 
 
 def test_dist_panel_space_divisibility():
-    assert dist_panel_space(64, 4) == (1, 2, 4)
-    assert dist_panel_space(64, 4, max_panels=8) == (1, 2, 4, 8)
+    """Satellite regression: 8 is reachable by default — the (1, 2, 4, 8)
+    literal used to be silently capped at max_panels=4, so the 8-panel
+    candidate was dead code in every default tuning run."""
+    assert dist_panel_space(64, 4) == (1, 2, 4, 8)
+    assert dist_panel_space(64, 4, max_panels=4) == (1, 2, 4)
     assert dist_panel_space(48, 4) == (1, 2, 4)  # 12 local rows: 8 drops out
     assert dist_panel_space(24, 4) == (1, 2)
     assert dist_panel_space(64, 0) == (1,)
     assert dist_panel_space(63, 4) == (1,)  # indivisible: monolithic only
+    # The panel space digests into the v3 topology key, so the widened
+    # default is a *different key* (re-tune), never a silently-served
+    # stale plan; pin the digest spelling.
+    assert topology_digest(devices=4, axis_name="fft", platform="cpu",
+                           panels=dist_panel_space(64, 4)) \
+        == "4xfft.cpu.k1-2-4-8"
 
 
 def test_dist_comm_bytes_scaling():
@@ -160,13 +169,23 @@ def test_fit_comm_params_from_dist_entries():
 
 
 # ---------------------------------------------------- eager SPMD rejection
+# Since the device-group lowering (plan.groups), heterogeneity per se is
+# not a rejection: mixed row-FFT variants branch per shard and mixed
+# lengths run at the schedule's max.  The named SPMD error remains only
+# for what the grouped program genuinely cannot express — program-level
+# knob mixes (pad/fused/pipeline_panels) and entries that don't tile the
+# mesh's equal shards.
 
-def _hetero_schedule(n=16):
+
+def _unloweable_schedule(n=16):
+    """Mixes fused with unfused: the two disagree on the all_to_all
+    layout, so no single-SPMD lowering exists."""
     return SegmentSchedule.from_parts(
-        n, [n // 2, n // 2], None, [PlanConfig(), PlanConfig(radix=2)])
+        n, [n // 2, n // 2], None,
+        [PlanConfig(radix=4, fused=True), PlanConfig()])
 
 
-def test_heterogeneous_schedule_raises_before_any_device_work(monkeypatch):
+def test_unloweable_schedule_raises_before_any_device_work(monkeypatch):
     """Satellite regression: the named SPMD error fires eagerly — before
     ``_local_phase`` (or any other device work) runs — and carries the
     schedule's describe() so the message names the offending mix."""
@@ -176,53 +195,133 @@ def test_heterogeneous_schedule_raises_before_any_device_work(monkeypatch):
         raise AssertionError("device work ran before SPMD validation")
 
     monkeypatch.setattr(mod, "_local_phase", boom)
-    sched = _hetero_schedule()
+    sched = _unloweable_schedule()
     m = jnp.ones((16, 16), jnp.complex64)
     with pytest.raises(ValueError, match="SPMD") as exc:
         pfft2_distributed(m, _mesh1(), "fft", schedule=sched)
     assert sched.describe() in str(exc.value)
 
 
-def test_mixed_lengths_raise_eagerly_with_describe(monkeypatch):
+def test_unmappable_rows_raise_eagerly_with_describe(monkeypatch):
+    """A heterogeneous schedule whose entries don't tile the mesh's equal
+    N/p shards has no device-group assignment — named error, eagerly."""
     import repro.core.pfft_dist as mod
 
     def boom(*a, **kw):  # pragma: no cover - must never be reached
         raise AssertionError("device work ran before SPMD validation")
 
     monkeypatch.setattr(mod, "_local_phase", boom)
-    n = 48
+    n = 16  # 1-device mesh: n_loc = 16, but each entry covers only 8 rows
     sched = SegmentSchedule.from_parts(
-        n, [24, 24], np.array([48, 64]), [PlanConfig(pad="fpm")] * 2)
-    with pytest.raises(ValueError, match="mixed effective lengths") as exc:
+        n, [8, 8], None, [PlanConfig(), PlanConfig(radix=2)])
+    with pytest.raises(ValueError, match="SPMD") as exc:
         pfft2_distributed(jnp.ones((n, n), jnp.complex64), _mesh1(), "fft",
                           schedule=sched)
     assert sched.describe() in str(exc.value)
 
 
+def test_mixed_lengths_lower_at_max_length():
+    """Mixed effective lengths no longer reject: the uniform-length rule
+    runs every device at the schedule's max (here 64), the program-level
+    analog of ragged_row_layout."""
+    n = 48
+    sched = SegmentSchedule.from_parts(
+        n, [24, 24], np.array([48, 64]), [PlanConfig(pad="fpm")] * 2)
+    rng = np.random.default_rng(11)
+    m = jnp.asarray((rng.standard_normal((n, n))
+                     + 1j * rng.standard_normal((n, n))).astype(np.complex64))
+    out = pfft2_distributed(m, _mesh1(), "fft", schedule=sched)
+    ref = pfft2_distributed(m, _mesh1(), "fft", padded="crop", pad_len=64)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 def test_make_pfft2_fn_validates_at_build_time():
-    """The error must not wait for the first traced call."""
+    """The error must not wait for the first traced call — both the
+    program-knob mix and the shard-tiling failure are build-time."""
     with pytest.raises(ValueError, match="SPMD"):
-        make_pfft2_fn(_mesh1(), 16, schedule=_hetero_schedule())
+        make_pfft2_fn(_mesh1(), 16, schedule=_unloweable_schedule())
+    unmappable = SegmentSchedule.from_parts(
+        16, [8, 8], None, [PlanConfig(), PlanConfig(radix=2)])
+    with pytest.raises(ValueError, match="SPMD"):
+        make_pfft2_fn(_mesh1(), 16, schedule=unmappable)
 
 
-def test_validate_spmd_schedule_accepts_pad_len_override():
+def test_validate_spmd_schedule_relaxed():
+    """The validator accepts what the grouped lowering can express and
+    returns the program config (anchor of the makespan-dominant entry)."""
     n = 48
     mixed_len = SegmentSchedule.from_parts(
         n, [24, 24], np.array([48, 64]), [PlanConfig(pad="fpm")] * 2)
-    with pytest.raises(ValueError):
-        validate_spmd_schedule(mixed_len)
+    assert validate_spmd_schedule(mixed_len) == PlanConfig(pad="fpm")
     assert validate_spmd_schedule(mixed_len, 64) == PlanConfig(pad="fpm")
+    hetero = SegmentSchedule.from_parts(
+        n, [16, 32], None, [PlanConfig(), PlanConfig(radix=2)])
+    assert validate_spmd_schedule(hetero) == PlanConfig(radix=2)  # anchor
+    with pytest.raises(ValueError, match="SPMD"):
+        validate_spmd_schedule(_unloweable_schedule())
+    mixed_panels = SegmentSchedule.from_parts(
+        n, [24, 24], None,
+        [PlanConfig(pipeline_panels=2), PlanConfig(radix=2)])
+    with pytest.raises(ValueError, match="SPMD"):
+        validate_spmd_schedule(mixed_panels)
+    mixed_pad = SegmentSchedule.from_parts(
+        n, [24, 24], np.array([96, 96]),
+        [PlanConfig(pad="fpm"), PlanConfig(pad="czt")])
+    with pytest.raises(ValueError, match="SPMD"):
+        validate_spmd_schedule(mixed_pad)
 
 
 # ----------------------------------------------- plan_pfft(mesh=) plumbing
 
-def test_plan_pfft_mesh_requires_lb_and_divisibility():
+def test_plan_pfft_mesh_method_validation():
+    """The padded FPM methods are plannable on a mesh now (the
+    device-group lowering drives them), but need an FPMSet covering
+    exactly the mesh axis — one abstract processor per device — and
+    plain 'fpm' stays rejected: on the even SPMD split it would run
+    byte-identically to 'lb'."""
     mesh = _mesh1()
-    with pytest.raises(ValueError, match="method='lb'"):
+    with pytest.raises(ValueError, match="byte-identically"):
         plan_pfft(32, method="fpm", mesh=mesh)
+    with pytest.raises(ValueError, match="requires fpms"):
+        plan_pfft(32, method="fpm-pad", mesh=mesh)
     with pytest.raises(ValueError, match="conflicts with mesh axis"):
         plan_pfft(32, p=2, method="lb", mesh=mesh)
+    xs = np.array([1, 16, 32])
+    ys = np.array([32, 64])
+    sp = np.outer(xs, np.log2(ys)) + 3.0
+    from repro.core import FPMSet, SpeedFunction
+    two = FPMSet([SpeedFunction(xs, ys, sp, name=f"P{i}") for i in range(2)])
+    with pytest.raises(ValueError, match="one abstract processor per"):
+        plan_pfft(32, fpms=two, method="fpm-pad", mesh=mesh)
     # (the N % p check needs p > 1; the 4-device acceptance script covers it)
+
+
+def test_plan_pfft_mesh_fpm_pad_single_device():
+    """plan_pfft(mesh=, method='fpm-pad') executes the uniform-length
+    padded-crop semantics on the degenerate 1-device mesh."""
+    mesh = _mesh1()
+    n = 32
+    xs = np.array([1, n // 2, n])
+    ys = np.array(sorted({n, 64, 128}))
+    sp = np.outer(xs, np.log2(ys)) + 3.0
+    from repro.core import FPMSet, SpeedFunction
+    fpms = FPMSet([SpeedFunction(xs, ys, sp, name="P0")])
+    plan = plan_pfft(n, fpms=fpms, method="fpm-pad", mesh=mesh,
+                     tune="estimate")
+    assert plan.pad_lengths is not None and len(plan.pad_lengths) == 1
+    rng = np.random.default_rng(3)
+    m = jnp.asarray((rng.standard_normal((n, n))
+                     + 1j * rng.standard_normal((n, n))).astype(np.complex64))
+    out = plan.execute(m)
+    L = max(int(plan.pad_lengths[0]), n)
+
+    def crop_phase(mat):
+        if L > n:
+            mat = jnp.pad(mat, ((0, 0), (0, L - n)))
+        return jnp.fft.fft(mat, axis=-1)[:, :n]
+
+    ref = crop_phase(crop_phase(m).T).T
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-2)
 
 
 def test_plan_pfft_one_device_mesh_measure_falls_back(tmp_path):
@@ -286,7 +385,7 @@ entry = doc["entries"][key]
 assert entry["mode"] == "measure" and entry["time_s"] > 0
 assert entry["comm_bytes"] == 64 * 64 * 8 * 3 / 4, entry["comm_bytes"]
 assert entry["comm_time_s"] >= 0
-assert entry["topology"] == topology_digest(mesh, "fft", panels=(1, 2, 4))
+assert entry["topology"] == topology_digest(mesh, "fft", panels=(1, 2, 4, 8))
 
 # 2. second identical call: served from wisdom with ZERO re-measurement
 def no_measure(*a, **kw):

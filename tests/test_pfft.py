@@ -88,6 +88,38 @@ def test_pfft_fpm_pad_padded_semantics():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-2)
 
 
+def test_pfft_fpm_pad_normalizes_explicit_config_pad():
+    """Satellite regression: the method owns the pad strategy.  An
+    explicit ``config=`` whose pad drifted (czt, none, or a fused pick)
+    must still run the paper's padded-signal crop — before the shared
+    ``normalize_pad`` helper, ``pfft_fpm_pad(config=PlanConfig(pad=
+    'czt'))`` silently ran Bluestein (the *exact* transform) instead of
+    the documented interpolation."""
+    from repro.plan import PlanConfig
+    n = 32
+    m = random_signal(n)
+    # One slow/flat + two fast/pow2-peaked FPMs: the fast processors'
+    # FPM-chosen pad is 64 > N, so the pad semantics actually engage
+    # (fpms_for's smooth speeds never favor padding at this size).
+    xs = np.array(sorted({1, n // 2, n}))
+    ys = np.array(sorted({n, 64, 128}))
+    fast = np.tile([1e9, 4e9, 1e9], (len(xs), 1))
+    slow = np.full((len(xs), len(ys)), 2.5e8)
+    fpms = FPMSet([SpeedFunction(xs, ys, slow if i == 0 else fast,
+                                 name=f"P{i}") for i in range(3)])
+    ref, part, pads = pfft_fpm_pad(m, fpms, return_partition=True)
+    assert any(int(p_) > n for p_ in pads)  # padding actually engages
+    # The padded-crop result differs from the exact DFT, so a czt drift
+    # would be visible — the assertion below is load-bearing.
+    exact = np.asarray(jnp.fft.fft2(m))
+    assert float(np.max(np.abs(np.asarray(ref) - exact))) > 1e-3
+    for drifted in (PlanConfig(pad="czt"), PlanConfig(pad="none"),
+                    PlanConfig(radix=4, fused=True)):
+        out = pfft_fpm_pad(m, fpms, config=drifted)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+
 @pytest.mark.parametrize("n", [32, 48])
 def test_pfft_fpm_czt_exact_despite_padding(n):
     m = random_signal(n)
@@ -104,6 +136,41 @@ def test_czt_dft_property_any_length(n, seed):
                      + 1j * rng.standard_normal((2, n))).astype(np.complex64))
     np.testing.assert_allclose(np.asarray(czt_dft(x)),
                                np.asarray(jnp.fft.fft(x, axis=-1)), atol=5e-3)
+
+
+def test_czt_chirp_exact_past_int32_overflow():
+    """Satellite regression: the chirp's quadratic residues are computed
+    in int64 — the old traced ``jnp.arange(n)`` path squared in int32
+    (x64 off), wrapping for j >= 46341 and silently corrupting the
+    "exact" transform for every N > 46340.  Checked against the int64
+    oracle at the overflow boundary without allocating a giant
+    transform (the chirp is O(N), the transform would be O(N^2))."""
+    from repro.core.pfft import _czt_chirp
+    n = 46342  # j = 46341 is the first index where int32 j*j wraps
+    chirp = _czt_chirp(n)
+    assert chirp.shape == (n,)
+    j = np.array([0, 1, 46340, 46341], dtype=np.int64)
+    oracle = np.exp(-1j * np.pi * ((j * j) % (2 * n)) / n)
+    np.testing.assert_allclose(chirp[j], oracle, rtol=0, atol=1e-12)
+    # The int32 computation this replaces is genuinely wrong there — the
+    # wrapped square lands on a different residue class mod 2N (2N has an
+    # odd factor, so adding 2^32 can never preserve it), i.e. the test
+    # is load-bearing, not vacuous.
+    wrapped = (j * j) % (1 << 32)
+    wrapped = np.where(wrapped >= (1 << 31), wrapped - (1 << 32), wrapped)
+    bad = np.exp(-1j * np.pi * np.fmod(wrapped, 2 * n) / n)
+    assert abs(bad[3] - oracle[3]) > 1e-3
+
+
+def test_czt_dft_matches_oracle_at_unpadded_large_index_regime():
+    """The fixed chirp keeps czt_dft exact for sizes well past any pow2
+    boundary quirks (cheap sanity companion to the chirp unit test)."""
+    n = 1031  # prime: no FFT shortcut, full Bluestein machinery
+    rng = np.random.default_rng(9)
+    x = jnp.asarray((rng.standard_normal((2, n))
+                     + 1j * rng.standard_normal((2, n))).astype(np.complex64))
+    np.testing.assert_allclose(np.asarray(czt_dft(x)),
+                               np.asarray(jnp.fft.fft(x, axis=-1)), atol=2e-2)
 
 
 def test_czt_rejects_short_fft():

@@ -108,3 +108,22 @@ def test_unknown_axis_raises():
     with pytest.raises(KeyError):
         pfft2_distributed(jnp.ones((32, 32), jnp.complex64),
                           jax.make_mesh((1,), ("fft",)), "nope")
+
+
+def test_local_phase_refuses_silent_monolithic_fallback():
+    """Satellite regression: a panel count that doesn't divide the local
+    rows used to fall back to the monolithic phase silently — a direct
+    caller (or tuner drift) would time/run a different program than
+    requested.  Now it's a named error, raised before any lax op."""
+    from repro.core.pfft_dist import _local_phase
+    from repro.plan import PlanConfig
+    block = jnp.ones((16, 16), jnp.complex64)
+    with pytest.raises(ValueError, match="divide local rows"):
+        _local_phase(block, "fft", 16, padded=None, pad_len=16,
+                     config=PlanConfig(), pipeline_panels=3)
+    # pfft2_distributed still validates up front with its own message
+    from repro.core.pfft_dist import pfft2_distributed
+    with pytest.raises(ValueError, match="divide local rows"):
+        pfft2_distributed(jnp.ones((32, 32), jnp.complex64),
+                          jax.make_mesh((1,), ("fft",)), "fft",
+                          config=PlanConfig(pipeline_panels=3))

@@ -467,20 +467,28 @@ def test_fit_cost_params_from_file(tmp_path):
 
 # ------------------------------------------------------------- distributed
 
-def test_dist_rejects_heterogeneous_schedule():
+def test_dist_rejects_unloweable_heterogeneous_schedule():
+    """Heterogeneous row-FFT mixes lower as device-group programs now;
+    what still raises the named SPMD error are program-knob mixes (fused
+    here) and entries that cannot tile the mesh's equal shards."""
     from repro.core.pfft_dist import pfft2_distributed
     mesh = jax.make_mesh((1,), ("fft",))
     n = 16
-    sched = SegmentSchedule.from_parts(
+    fused_mix = SegmentSchedule.from_parts(
+        n, [8, 8], None, [PlanConfig(radix=4, fused=True), PlanConfig()])
+    with pytest.raises(ValueError, match="SPMD"):
+        pfft2_distributed(random_signal(n), mesh, "fft", schedule=fused_mix)
+    # 1-device mesh: n_loc = 16, entries of 8 rows can't tile the shard
+    untileable = SegmentSchedule.from_parts(
         n, [8, 8], None, [PlanConfig(), PlanConfig(radix=2)])
     with pytest.raises(ValueError, match="SPMD"):
-        pfft2_distributed(random_signal(n), mesh, "fft", schedule=sched)
+        pfft2_distributed(random_signal(n), mesh, "fft", schedule=untileable)
 
 
 def test_dist_schedule_carries_fpm_pad_length():
     """The schedule's FPM-chosen effective length reaches the local
-    phase (not the model-free smooth default); mixed lengths are
-    rejected like mixed configs (SPMD is one program)."""
+    phase (not the model-free smooth default); mixed lengths run at the
+    schedule's max — the device-group uniform-length rule."""
     from repro.core.pfft_dist import pfft2_distributed
     mesh = jax.make_mesh((1,), ("fft",))
     n = 48
@@ -492,8 +500,8 @@ def test_dist_schedule_carries_fpm_pad_length():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     mixed_len = SegmentSchedule.from_parts(
         n, [24, 24], np.array([48, 64]), [PlanConfig(pad="fpm")] * 2)
-    with pytest.raises(ValueError, match="mixed effective lengths"):
-        pfft2_distributed(m, mesh, "fft", schedule=mixed_len)
+    out_mixed = pfft2_distributed(m, mesh, "fft", schedule=mixed_len)
+    np.testing.assert_array_equal(np.asarray(out_mixed), np.asarray(ref))
 
 
 def test_dist_schedule_and_fused_single_device():
