@@ -68,6 +68,10 @@ class PfftPlan:
     tuning: dict[str, Any]
     _fn: Callable[[jnp.ndarray], jnp.ndarray]
 
+    # Distributed plans carry their mesh so the plan can be *rebuilt*
+    # against the same topology (the self-healing hot-swap path).
+    mesh: Any = None
+    axis_name: str = "fft"
     _batched_fns: dict[int, Callable] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
@@ -98,6 +102,38 @@ class PfftPlan:
     @property
     def d(self) -> np.ndarray:
         return self.partition.d
+
+    def with_schedule(self, schedule: SegmentSchedule,
+                      tuning: dict[str, Any] | None = None) -> "PfftPlan":
+        """Same problem, new execution schedule: rebuild the jitted
+        executor around ``schedule`` and return a fresh plan.
+
+        This is the hot-swap primitive of the self-healing runtime
+        (``repro.runtime.resilient``): an online re-plan produces a new
+        ``SegmentSchedule`` (typically a device-group program that gives
+        a degraded device different work) and the wrapper swaps it in at
+        the next call boundary.  The swapped program lowers exactly like
+        ``plan_pfft`` lowers — distributed plans re-enter
+        ``pfft2_distributed`` on the captured mesh, single-host plans
+        re-enter the limb on the captured partition.
+        """
+        if self.mesh is not None:
+            from repro.core.pfft_dist import pfft2_distributed
+            mesh, axis_name = self.mesh, self.axis_name
+
+            def raw(m):
+                return pfft2_distributed(m, mesh, axis_name,
+                                         schedule=schedule)
+        else:
+            d = self.partition.d
+
+            def raw(m):
+                return _pfft_limb(m, d, schedule=schedule)
+
+        return dataclasses.replace(
+            self, schedule=schedule, config=schedule.anchor_config,
+            tuning=dict(tuning) if tuning is not None else dict(self.tuning),
+            _fn=jax.jit(raw), _batched_fns={})
 
 
 def _resolve_schedule(n: int, method: Method, part: PartitionResult,
@@ -335,4 +371,5 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
 
     return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
                     config=schedule.anchor_config, schedule=schedule,
-                    tuning=tuning, _fn=jax.jit(raw))
+                    tuning=tuning, _fn=jax.jit(raw), mesh=mesh,
+                    axis_name=axis_name)

@@ -94,6 +94,43 @@ def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
     return fft_rows(block, **kw)
 
 
+def _faulted_fft(fft, axis_name: str, axis_size: int | None):
+    """Apply the fault layer's per-device slowdown to a local row-FFT.
+
+    When the process-global ``FaultInjector`` has an active slowdown, the
+    FFT is wrapped per mesh position: a ``lax.switch`` on
+    ``axis_index(axis_name)`` routes each device to a ``repeated``
+    variant that genuinely runs its FFT ``factor`` times (bit-identical
+    output via exact power-of-two rescaling — work XLA can neither CSE
+    nor DCE), so an injected straggler costs real wall time exactly
+    where a thermally-throttled device would.  With no active fault the
+    function is returned untouched — zero overhead — and callers that
+    don't thread ``axis_size`` (single-host paths) are never wrapped.
+
+    Injection is read at *trace* time: executors that cache jitted
+    programs re-trace on the injector's ``epoch`` (``ResilientPlan``
+    does; a plain jitted ``pfft2_distributed`` traced before the fault
+    keeps running the healthy program, exactly like real hardware drift
+    under an already-compiled binary).
+    """
+    if axis_size is None:
+        return fft
+    from repro.runtime.faults import get_injector, repeated  # lazy: no cycle
+    reps = get_injector().local_repeats(int(axis_size))
+    if reps is None:
+        return fft
+    distinct = sorted(set(reps))
+    branch_of = jnp.asarray([distinct.index(r) for r in reps],
+                            dtype=jnp.int32)
+    branches = [repeated(fft, r) for r in distinct]
+
+    def slowed(block: jnp.ndarray) -> jnp.ndarray:
+        b = branch_of[jax.lax.axis_index(axis_name)]
+        return jax.lax.switch(b, branches, block)
+
+    return slowed
+
+
 def _grouped_local_fft(axis_name: str, n: int, *, padded: str | None,
                        pad_len: int, program: DeviceGroupProgram,
                        backend: str | None):
@@ -124,7 +161,8 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
                  padded: str | None, pad_len: int, config: PlanConfig,
                  backend: str | None = None,
                  pipeline_panels: int = 1,
-                 program: DeviceGroupProgram | None = None) -> jnp.ndarray:
+                 program: DeviceGroupProgram | None = None,
+                 axis_size: int | None = None) -> jnp.ndarray:
     """One (row FFT -> distributed transpose) phase on a local block.
 
     block: (n_loc, N) — this device's rows.  Returns (n_loc, N): this
@@ -175,6 +213,9 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
         fft = functools.partial(_local_fft, n=n, padded=padded,
                                 pad_len=pad_len, config=config,
                                 backend=backend)
+    fft = _faulted_fft(fft, axis_name, axis_size)
+    if fused:
+        fft_t = _faulted_fft(fft_t, axis_name, axis_size)
     a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
                             split_axis=1, concat_axis=0, tiled=True)
     n_loc = block.shape[0]
@@ -451,7 +492,7 @@ def pfft2_distributed(
     phase = functools.partial(
         _local_phase, axis_name=axis_name, n=n, padded=padded,
         pad_len=pad_len, config=config, backend=backend,
-        pipeline_panels=panels, program=program)
+        pipeline_panels=panels, program=program, axis_size=int(p))
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,

@@ -126,7 +126,10 @@ def main() -> int:
                 raise
             print(f"[train] runtime error ({e}); rebuilding mesh from "
                   f"surviving devices and resuming from checkpoint")
-            rebuild_mesh(model_axis=args.model_axis)
+            rebuilt = rebuild_mesh(model_axis=args.model_axis)
+            if rebuilt.dropped:
+                print(f"[train] rebuilt grid uses {rebuilt.used} devices; "
+                      f"{rebuilt.dropped} survivor(s) do not fit and idle")
 
 
 if __name__ == "__main__":

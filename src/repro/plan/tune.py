@@ -41,6 +41,29 @@ def _is_pow2(n: int) -> bool:
     return n > 0 and not (n & (n - 1))
 
 
+def _measure_with_retry(thunk, retries: int, base_s: float = 0.05):
+    """Run a measurement thunk, retrying transient failures with
+    exponential backoff; re-raises after the budget is exhausted.
+
+    Device measurement is the tuner's only fallible step (a transiently
+    wedged device, an allocator hiccup mid-chaos) — the distributed
+    tuners call this when ``measure_retries > 0`` and fall back to the
+    estimate ranking (``info["measure_fallback"]``) if even the retries
+    fail, so a flaky measurement degrades a *plan choice*, never the
+    caller.  ``retries=0`` (the default everywhere) keeps the historical
+    raise-through behavior.
+    """
+    delay = float(base_s)
+    for attempt in range(int(retries) + 1):
+        try:
+            return thunk()
+        except Exception:
+            if attempt >= retries:
+                raise
+            time.sleep(delay)
+            delay *= 2.0
+
+
 def candidate_configs(n: int, *, pad: str = "none", d=None,
                       panels: Sequence[int] = (1,)) -> list[PlanConfig]:
     """Valid ``PlanConfig`` candidates for an n x n problem.
@@ -500,7 +523,8 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
                      pad_len: int | None = None, fpms: FPMSet | None = None,
                      params: CostParams | None = None, top_k: int = 3,
                      panels: Sequence[int] | None = None,
-                     dtype=np.complex64, reps: int = 3
+                     dtype=np.complex64, reps: int = 3,
+                     measure_retries: int = 0
                      ) -> tuple[PlanConfig, dict]:
     """Pick the best ``PlanConfig`` for ``pfft2_distributed`` on ``mesh``.
 
@@ -576,8 +600,20 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
             finalists.append(cfg)
         if len(finalists) >= max(top_k, 1):
             break
-    measured = measure_dist_configs(finalists, n, mesh, axis_name,
-                                    pad_len=pad_len, dtype=dtype, rounds=reps)
+    try:
+        measured = _measure_with_retry(
+            lambda: measure_dist_configs(finalists, n, mesh, axis_name,
+                                         pad_len=pad_len, dtype=dtype,
+                                         rounds=reps),
+            measure_retries)
+    except Exception as err:
+        if measure_retries <= 0:
+            raise
+        # Retries exhausted: serve the estimate ranking rather than fail
+        # the caller (the self-healing re-planner must always get a plan).
+        info["measure_fallback"] = (
+            f"measurement failed after {measure_retries} retries: {err!r}")
+        return ranked[0][0], info
     winner = min(measured, key=measured.get)
     info["measured"] = [(cfg.to_dict(), float(t)) for cfg, t in measured.items()]
     info["time_s"] = float(measured[winner])
@@ -591,7 +627,16 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
         # program the end-to-end measurement ran.
         from repro.core.pfft_dist import default_dist_pad_len
         eff_len = default_dist_pad_len(n, winner.dist_padded)
-    local_s = _measure_local_phase(winner, n, p, eff_len, dtype, reps)
+    try:
+        local_s = _measure_with_retry(
+            lambda: _measure_local_phase(winner, n, p, eff_len, dtype, reps),
+            measure_retries)
+    except Exception as err:
+        if measure_retries <= 0:
+            raise
+        # The winner stands; only the comm sample is lost this round.
+        info["dist"]["comm_sample_error"] = repr(err)
+        return winner, info
     info["dist"]["local_phase_s"] = float(local_s)
     info["dist"]["comm_time_meas_s"] = float(
         max(measured[winner] - 2.0 * local_s, 0.0))
@@ -652,7 +697,8 @@ def tune_dist_schedule(n: int, mesh, axis_name: str = "fft", *,
                        fpms: FPMSet | None = None,
                        params: CostParams | None = None, top_k: int = 3,
                        panels: Sequence[int] | None = None,
-                       dtype=np.complex64, reps: int = 3
+                       dtype=np.complex64, reps: int = 3,
+                       measure_retries: int = 0
                        ) -> tuple[SegmentSchedule, dict]:
     """Schedule-shaped distributed tuner; returns (schedule, info).
 
@@ -684,7 +730,7 @@ def tune_dist_schedule(n: int, mesh, axis_name: str = "fft", *,
     cfg, info = tune_dist_config(n, mesh, axis_name, mode=mode, pad=pad,
                                  pad_len=pad_len, fpms=fpms, params=params,
                                  top_k=top_k, panels=panels, dtype=dtype,
-                                 reps=reps)
+                                 reps=reps, measure_retries=measure_retries)
     if params is None:
         params = CostParams.for_backend()
     d = np.full(p, n // p, dtype=np.int64) if p > 0 else None
@@ -709,12 +755,24 @@ def tune_dist_schedule(n: int, mesh, axis_name: str = "fft", *,
     if mode == "estimate" or "measure_fallback" in info:
         winner = hetero if est_hetero < est_homo else homo
     else:
-        raced = measure_dist_configs([homo, hetero], n, mesh, axis_name,
-                                     dtype=dtype, rounds=reps)
-        winner = min(raced, key=raced.get)
-        info["grouped_measured"] = [(s.describe(), float(t))
-                                    for s, t in raced.items()]
-        info["time_s"] = float(raced[winner])
+        try:
+            raced = _measure_with_retry(
+                lambda: measure_dist_configs([homo, hetero], n, mesh,
+                                             axis_name, dtype=dtype,
+                                             rounds=reps),
+                measure_retries)
+        except Exception as err:
+            if measure_retries <= 0:
+                raise
+            info["measure_fallback"] = (
+                f"grouped race failed after {measure_retries} retries: "
+                f"{err!r}")
+            winner = hetero if est_hetero < est_homo else homo
+        else:
+            winner = min(raced, key=raced.get)
+            info["grouped_measured"] = [(s.describe(), float(t))
+                                        for s, t in raced.items()]
+            info["time_s"] = float(raced[winner])
     info["chosen"] = ("heterogeneous" if len(winner.configs) > 1
                       else "homogeneous")
     info["schedule"] = winner.to_dict()

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 import zlib
 
 import numpy as np
@@ -173,23 +174,63 @@ def lookup_wisdom(path: str, key: str
         return None  # schema drift inside an entry is also just a miss
 
 
+def _acquire_lock(path: str, timeout_s: float | None):
+    """Exclusive flock on the store's ``.lock`` sibling, or None when the
+    platform has no ``fcntl`` (the write is then merely atomic).
+
+    ``timeout_s=None`` blocks, the historical behavior.  A finite timeout
+    polls non-blocking acquisitions with backoff and raises
+    ``TimeoutError`` when a wedged writer still holds the lock — callers
+    for whom the store is advisory (the self-healing re-planner) catch it
+    and move on rather than hang recovery behind a stuck process.
+    """
+    try:
+        import fcntl
+        lock_fh = open(path + ".lock", "w")
+    except (ImportError, OSError):
+        return None
+    if timeout_s is None:
+        try:
+            fcntl.flock(lock_fh, fcntl.LOCK_EX)
+        except OSError:
+            lock_fh.close()
+            return None
+        return lock_fh
+    deadline = time.monotonic() + float(timeout_s)
+    delay = 0.01
+    while True:
+        try:
+            fcntl.flock(lock_fh, fcntl.LOCK_EX | fcntl.LOCK_NB)
+            return lock_fh
+        except OSError:
+            if time.monotonic() >= deadline:
+                lock_fh.close()
+                raise TimeoutError(
+                    f"wisdom lock {path + '.lock'} still held after "
+                    f"{timeout_s:g}s")
+            time.sleep(delay)
+            delay = min(delay * 2.0, 0.25)
+
+
 def record_wisdom(path: str, key: str, config: PlanConfig | SegmentSchedule,
                   *, mode: str, time_s: float | None = None,
-                  extra: dict | None = None) -> None:
+                  extra: dict | None = None, retries: int = 0,
+                  backoff_s: float = 0.05,
+                  lock_timeout_s: float | None = None) -> None:
     """Insert/overwrite one entry, atomically rewriting the store.
 
     The load-modify-replace cycle holds an exclusive flock on a ``.lock``
     sibling so concurrent writers (a benchmark warming sizes while a
     serving process records its own measure) don't drop each other's
     entries; on platforms without ``fcntl`` the write is merely atomic.
+
+    ``retries`` re-attempts a failed write (``OSError``) with exponential
+    backoff — transient I/O pressure should not cost a measured plan.
+    ``lock_timeout_s`` bounds the wait for a contended lock (raises
+    ``TimeoutError`` — see ``_acquire_lock``); the default ``None``
+    blocks, preserving historical behavior.
     """
-    lock_fh = None
-    try:
-        import fcntl
-        lock_fh = open(path + ".lock", "w")
-        fcntl.flock(lock_fh, fcntl.LOCK_EX)
-    except (ImportError, OSError):
-        pass
+    lock_fh = _acquire_lock(path, lock_timeout_s)
     try:
         entries = load_wisdom(path)
         if isinstance(config, SegmentSchedule):
@@ -202,10 +243,19 @@ def record_wisdom(path: str, key: str, config: PlanConfig | SegmentSchedule,
             entry.update(extra)
         entries[key] = entry
         doc = {"version": WISDOM_VERSION, "entries": entries}
-        tmp = path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump(doc, fh, indent=2, sort_keys=True)
-        os.replace(tmp, path)
+        delay = float(backoff_s)
+        for attempt in range(int(retries) + 1):
+            try:
+                tmp = path + ".tmp"
+                with open(tmp, "w") as fh:
+                    json.dump(doc, fh, indent=2, sort_keys=True)
+                os.replace(tmp, path)
+                break
+            except OSError:
+                if attempt >= retries:
+                    raise
+                time.sleep(delay)
+                delay *= 2.0
     finally:
         if lock_fh is not None:
             lock_fh.close()

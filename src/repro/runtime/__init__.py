@@ -1,5 +1,37 @@
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.straggler import StragglerMonitor
-from repro.runtime.elastic import rebuild_mesh, reshard
+from repro.runtime.elastic import (RebuildResult, largest_fft_axis,
+                                   largest_grid, rebuild_fft_mesh,
+                                   rebuild_mesh, reshard)
+from repro.runtime.faults import (DeviceLostError, FaultInjector,
+                                  corrupt_wisdom, get_injector, inject,
+                                  locked_wisdom, repeated, retry_with_backoff)
 
-__all__ = ["CheckpointManager", "StragglerMonitor", "rebuild_mesh", "reshard"]
+__all__ = [
+    "CheckpointManager",
+    "StragglerMonitor",
+    "RebuildResult",
+    "largest_fft_axis",
+    "largest_grid",
+    "rebuild_fft_mesh",
+    "rebuild_mesh",
+    "reshard",
+    "DeviceLostError",
+    "FaultInjector",
+    "corrupt_wisdom",
+    "get_injector",
+    "inject",
+    "locked_wisdom",
+    "repeated",
+    "retry_with_backoff",
+    "ResilientPlan",
+]
+
+
+def __getattr__(name):
+    # ResilientPlan pulls in core.api (jax tracing machinery); keep the
+    # package import light for callers that only want the monitors.
+    if name == "ResilientPlan":
+        from repro.runtime.resilient import ResilientPlan
+        return ResilientPlan
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any
@@ -27,6 +28,7 @@ __all__ = ["CheckpointManager"]
 
 
 _BF16_SUFFIX = "__BF16__"
+_STEP_DIR = re.compile(r"^step_(\d+)$")
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -67,6 +69,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     # -- write --
 
@@ -79,13 +82,30 @@ class CheckpointManager:
         else:
             self.wait()                  # at most one in-flight write
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat, meta), daemon=True)
+                target=self._write_guarded, args=(step, flat, meta),
+                daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight background write; re-raise its failure.
+
+        A background write that died (disk full, permissions) used to
+        vanish with its daemon thread — ``wait()`` returned as if the
+        checkpoint landed.  The error is captured in the thread wrapper
+        and re-raised here (and by the next ``save(blocking=False)``,
+        which waits first), so a lost checkpoint is loud exactly once."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write_guarded(self, step: int, flat, meta) -> None:
+        try:
+            self._write(step, flat, meta)
+        except BaseException as err:  # surfaced by wait()/next save
+            self._error = err
 
     def _write(self, step: int, flat, meta) -> None:
         final = os.path.join(self.dir, f"step_{step:012d}")
@@ -111,10 +131,15 @@ class CheckpointManager:
     # -- read --
 
     def steps(self) -> list[int]:
+        """Sorted step numbers present in the directory.  Only exact
+        ``step_<digits>`` entries count — stray names (a user's
+        ``step_backup``, an editor's ``step_5~``, in-flight ``.tmp``
+        dirs) are skipped instead of crashing the listing."""
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name[5:]))
+            m = _STEP_DIR.match(name)
+            if m:
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> int | None:

@@ -1,41 +1,94 @@
 """Elastic scaling: rebuild the mesh from the surviving device set and
 re-shard live state onto it.
 
-On a device/host failure the controller (launch/train.py) catches the
-error, queries ``jax.devices()`` again, calls ``rebuild_mesh`` to get the
-largest usable (data, model) grid, re-shards the last checkpoint (or the
-live state, if intact) with ``reshard``, re-partitions the batch via
-POPTA/HPOPTA, and resumes.  The deterministic data pipeline (keyed by step)
-makes the resumed stream identical regardless of the new topology.
+On a device/host failure the controller (launch/train.py, or the
+self-healing ``runtime.resilient`` wrapper) catches the error, queries
+``jax.devices()`` again, calls ``rebuild_mesh`` (training grids) or
+``rebuild_fft_mesh`` (the 1-D PFFT axis) to get the largest usable
+topology, re-shards the last checkpoint (or the live state, if intact)
+with ``reshard``, re-partitions work via POPTA/HPOPTA, and resumes.  The
+deterministic data pipeline (keyed by step) makes the resumed stream
+identical regardless of the new topology.
+
+Rebuilds return a ``RebuildResult``: a grid that does not fill (7
+survivors on a model_axis-4 grid) necessarily leaves devices idle, and
+that used to happen *silently* — the result now carries the dropped
+count so the caller can log capacity it is leaving on the floor.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Sequence
 
 import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-__all__ = ["rebuild_mesh", "reshard", "largest_grid"]
+__all__ = ["RebuildResult", "rebuild_mesh", "rebuild_fft_mesh", "reshard",
+           "largest_grid", "largest_fft_axis"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildResult:
+    """Outcome of a mesh rebuild.
+
+    ``used`` devices are in the mesh; ``dropped`` survivors did not fit
+    the grid (non-filling (data, model) product, or an FFT axis capped by
+    N's divisors) and sit idle — surfaced, never silent.
+    """
+
+    mesh: Mesh
+    used: int
+    dropped: int
 
 
 def largest_grid(n_devices: int, model_axis: int) -> tuple[int, int]:
     """Largest (data, model) grid using <= n_devices, preserving the model
-    axis if possible (TP degree is fixed by the model's sharding), else the
-    largest power-of-two model axis that fits."""
+    axis if possible (TP degree is fixed by the model's sharding), else
+    halving it until it fits (a non-power-of-two axis bottoms out at 1)."""
+    model_axis = max(int(model_axis), 1)
     while model_axis > 1 and n_devices < model_axis:
         model_axis //= 2
+    model_axis = max(model_axis, 1)
     data = max(1, n_devices // model_axis)
     return data, model_axis
 
 
 def rebuild_mesh(devices: Sequence[Any] | None = None, *,
-                 model_axis: int = 16) -> Mesh:
+                 model_axis: int = 16) -> RebuildResult:
     devices = list(devices if devices is not None else jax.devices())
     data, model = largest_grid(len(devices), model_axis)
-    grid = np.asarray(devices[: data * model]).reshape(data, model)
-    return Mesh(grid, ("data", "model"))
+    used = data * model
+    grid = np.asarray(devices[:used]).reshape(data, model)
+    return RebuildResult(mesh=Mesh(grid, ("data", "model")), used=used,
+                         dropped=len(devices) - used)
+
+
+def largest_fft_axis(n_devices: int, n: int) -> int:
+    """Largest p <= n_devices with n % p == 0 — the distributed PFFT
+    pipeline requires the row count to divide evenly over the mesh axis,
+    so after a device loss the rebuilt axis is N's largest divisor that
+    the survivors can still staff."""
+    for p in range(min(int(n_devices), int(n)), 1, -1):
+        if n % p == 0:
+            return p
+    return 1
+
+
+def rebuild_fft_mesh(n: int, devices: Sequence[Any] | None = None, *,
+                     axis_name: str = "fft") -> RebuildResult:
+    """Rebuild the 1-D PFFT mesh from the surviving devices.
+
+    Unlike the (data, model) grids, the FFT axis is additionally capped
+    by N's divisibility — 3 survivors for N=64 can only staff a 2-wide
+    axis, and the third device is *dropped* (reported, like every other
+    non-filling rebuild)."""
+    devices = list(devices if devices is not None else jax.devices())
+    p = largest_fft_axis(len(devices), n)
+    grid = np.asarray(devices[:p])
+    return RebuildResult(mesh=Mesh(grid, (axis_name,)), used=p,
+                         dropped=len(devices) - p)
 
 
 def reshard(tree: Any, mesh: Mesh, pspecs: Any) -> Any:

@@ -1,0 +1,453 @@
+"""Self-healing execution: detect -> re-plan -> hot-swap.
+
+``ResilientPlan`` closes the loop the ROADMAP called *online
+re-planning*: it wraps a distributed ``PfftPlan``, times every execute,
+probes per-device local-phase speeds, and feeds a ``StragglerMonitor``.
+
+**Drift path.**  When a device group drifts past the monitor's threshold
+the wrapper synthesises *degraded FPMs* (the observed slowdown folded
+into each group's speed function — the paper's heterogeneous-FPM input,
+built online instead of measured offline) and re-runs
+``tune_dist_schedule`` with them.  The winning ``SegmentSchedule`` —
+typically a device-group program, so the slow group genuinely gets
+different work — is lowered through ``PfftPlan.with_schedule`` and
+hot-swapped at the *next call boundary*; in-flight executes always
+finish on the plan they started on.  Re-planned picks are recorded to
+wisdom under a degradation-digest key, so a recurring drift signature is
+served from disk.
+
+**Loss path.**  A raised ``DeviceLostError`` (injected by
+``runtime.faults`` or translated from a real runtime error by the
+caller) triggers elastic recovery instead: rebuild the 1-D FFT mesh from
+the survivors (``rebuild_fft_mesh`` — the axis is capped by N's
+divisors, and any unplaceable survivors are reported), re-plan via
+``plan_pfft`` on the new mesh — whose wisdom key carries the new
+``topology_digest``, so a previously-measured reduced topology is
+*served* with zero re-measurement (serve-or-retune) — re-shard
+registered in-flight state via ``reshard``, and retry the failed call.
+
+Every recovery appends a structured event (detect/re-plan/swap timings)
+to ``.events`` — the raw material of ``benchmarks/resilience_bench.py``.
+
+The wrapper also re-traces its jitted executor whenever the fault
+injector's ``epoch`` moves: injection is only visible at trace time, so
+a stale trace would keep running the old world (exactly like a real
+compiled binary under hardware drift — which is why detection is driven
+by *measured* probes, not by asking the injector).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.api import _PAD_STRATEGY, PfftPlan, plan_pfft
+from repro.core.fpm import FPMSet, SpeedFunction
+from repro.plan.cost import CostParams
+from repro.plan.groups import device_group_program
+from repro.plan.schedule import SegmentSchedule
+from repro.plan.tune import dist_panel_space, tune_dist_schedule
+from repro.plan.wisdom import (lookup_wisdom, partition_digest, record_wisdom,
+                               topology_digest, wisdom_key)
+from repro.runtime.elastic import rebuild_fft_mesh, reshard
+from repro.runtime.faults import (DeviceLostError, get_injector,
+                                  repeated, retry_with_backoff)
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = ["ResilientPlan"]
+
+
+class ResilientPlan:
+    """Self-healing wrapper around a distributed ``PfftPlan``.
+
+    Parameters mirror ``plan_pfft`` (``method``/``fpms``/``tune``/
+    ``wisdom``/``config``/``dtype`` build the initial plan on ``mesh``)
+    plus the runtime knobs:
+
+    * ``alpha``/``drift_threshold`` — the ``StragglerMonitor``'s EWMA
+      factor and trigger multiple.
+    * ``probe_every`` — run the per-device local-phase probe every k-th
+      execute (the probe times each device's *own* schedule branch — the
+      injected-fault wrapper included — on its own device, so it sees
+      what the device group genuinely runs).
+    * ``cooldown`` — calls after a recovery during which drift does not
+      re-trigger (the new plan needs fresh, settled samples).
+    * ``retune_mode``/``retune_params`` — how the drift re-plan tunes
+      (defaults to the initial ``tune`` mode, or ``"estimate"`` when the
+      initial plan was untuned).
+    * ``measure_retries`` / ``wisdom_lock_timeout_s`` — the
+      retry-with-backoff budget around measure-mode re-tuning and the
+      bound on waiting for a wedged wisdom lock (a stuck store must
+      never stall recovery).
+    """
+
+    def __init__(self, n: int, *, mesh=None, axis_name: str = "fft",
+                 method: str = "lb", fpms: FPMSet | None = None,
+                 tune: str = "estimate", wisdom: str | None = None,
+                 config=None, dtype: str = "complex64", eps: float = 0.05,
+                 alpha: float = 0.3, drift_threshold: float = 1.3,
+                 probe_every: int = 1, cooldown: int = 4,
+                 retune_mode: str | None = None,
+                 retune_params: CostParams | None = None,
+                 min_probe_rounds: int = 3,
+                 measure_retries: int = 2,
+                 wisdom_lock_timeout_s: float | None = 5.0):
+        if mesh is None:
+            from repro.launch.mesh import make_fft_mesh
+            mesh = make_fft_mesh(axis_name=axis_name)
+        self.n = int(n)
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.method = method
+        self.fpms = fpms
+        self.tune = tune
+        self.wisdom = wisdom
+        self.dtype = dtype
+        self.eps = eps
+        self.alpha = alpha
+        self.drift_threshold = drift_threshold
+        self.probe_every = max(int(probe_every), 1)
+        self.cooldown = max(int(cooldown), 0)
+        self.retune_mode = retune_mode or (tune if tune != "off" else "estimate")
+        self.retune_params = retune_params
+        self.min_probe_rounds = max(int(min_probe_rounds), 1)
+        self.measure_retries = int(measure_retries)
+        self.wisdom_lock_timeout_s = wisdom_lock_timeout_s
+
+        self.plan = plan_pfft(self.n, fpms=fpms, method=method, eps=eps,
+                              tune=tune, wisdom=wisdom, config=config,
+                              dtype=dtype, mesh=mesh, axis_name=axis_name)
+        self.monitor = StragglerMonitor(self.p, alpha=alpha,
+                                        threshold=drift_threshold)
+        self.events: list[dict] = []
+        self.step_times: list[float] = []
+        self.last_degraded_fpms: FPMSet | None = None
+        self._calls = 0
+        self._pending: PfftPlan | None = None
+        self._cooldown_until = 0
+        self._probe_rounds = 0
+        self._probe_fns: dict = {}
+        self._probe_blocks: dict = {}
+        self._state = None
+        self._state_specs = None
+        self._epoch_seen = get_injector().epoch
+
+    # ---- introspection ----
+
+    @property
+    def p(self) -> int:
+        return int(self.mesh.shape[self.axis_name])
+
+    @property
+    def schedule(self) -> SegmentSchedule:
+        return self.plan.schedule
+
+    @property
+    def calls(self) -> int:
+        return self._calls
+
+    # ---- in-flight state (re-sharded across elastic recovery) ----
+
+    def register_state(self, tree: Any, pspecs: Any) -> None:
+        """Attach in-flight state to carry across device loss: on
+        recovery it is re-sharded onto the rebuilt mesh via ``reshard``
+        before the failed call retries."""
+        self._state, self._state_specs = tree, pspecs
+
+    @property
+    def state(self) -> Any:
+        return self._state
+
+    # ---- the hot path ----
+
+    def execute(self, m) -> jnp.ndarray:
+        inj = get_injector()
+        if self._pending is not None:
+            self.plan, self._pending = self._pending, None
+            for ev in reversed(self.events):   # stamp the swap boundary
+                if ev.get("kind") == "replan" and ev.get("swap_call") is None:
+                    ev["swap_call"] = self._calls
+                    ev["swap_wall"] = time.time()
+                    break
+        if inj.epoch != self._epoch_seen:
+            # The fault layer changed under an already-traced program:
+            # rebuild the jitted executor (and the probes) so the trace
+            # reflects the new world.
+            self._epoch_seen = inj.epoch
+            self.plan = self.plan.with_schedule(self.plan.schedule)
+            self._probe_fns.clear()
+        call = self._calls
+        self._calls += 1
+        try:
+            inj.check_execute(call)
+            out, dt = self._timed_execute(m)
+        except DeviceLostError as err:
+            self._recover_device_loss(err, call)
+            self._epoch_seen = get_injector().epoch
+            out, dt = self._timed_execute(m)   # retry on the rebuilt plan
+        self.step_times.append(dt)
+        if call % self.probe_every == 0:
+            self._observe(call)
+        return out
+
+    def _timed_execute(self, m):
+        x = jax.device_put(jnp.asarray(m),
+                           NamedSharding(self.mesh, P(self.axis_name, None)))
+        jax.block_until_ready(x)
+        t0 = time.perf_counter()
+        out = self.plan.execute(x)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    # ---- drift detection ----
+
+    def _device_configs(self):
+        """(per-device config list, uniform pad_len) of the current plan —
+        exactly what each device's branch of the SPMD program runs."""
+        sched = self.plan.schedule
+        if len(sched.configs) > 1:
+            prog = device_group_program(sched, self.p)
+            return ([prog.configs[g] for g in prog.group_of_device],
+                    prog.pad_len)
+        pad_len = max((e.length for e in sched), default=self.n)
+        return [sched.anchor_config] * self.p, pad_len
+
+    # Probe blocks carry at least this many rows: at small N a single
+    # N/p-row shard is dispatch-dominated on CPU, and a compute-side
+    # slowdown would hide under the constant overhead.  More rows only
+    # scale the per-row work, so relative speeds are unaffected.
+    PROBE_MIN_ROWS = 256
+
+    def _probe_group_times(self) -> list[float]:
+        """Best-of-3 seconds of each device's own local-phase program —
+        its schedule branch, the fault layer's ``repeated`` wrapper
+        included, *placed on that device* — the honest per-group sample
+        the monitor's EWMA digests."""
+        from repro.core.pfft_dist import _local_fft  # lazy: core imports plan
+        inj = get_injector()
+        cfgs, pad_len = self._device_configs()
+        n_loc = max(self.n // self.p, 1, self.PROBE_MIN_ROWS)
+        devices = list(self.mesh.devices.flat)
+        times = []
+        for i, cfg in enumerate(cfgs):
+            reps = inj.repeat_for(i)
+            key = (cfg, pad_len, n_loc, reps, i)
+            cached = self._probe_fns.get(key)
+            if cached is None:
+                block = self._probe_blocks.get(n_loc)
+                if block is None:
+                    rng = np.random.default_rng(0)
+                    block = jnp.asarray(
+                        (rng.standard_normal((n_loc, self.n))
+                         + 1j * rng.standard_normal((n_loc, self.n))
+                         ).astype(self.dtype))
+                    self._probe_blocks[n_loc] = block
+                base = functools.partial(_local_fft, n=self.n,
+                                         padded=cfg.dist_padded,
+                                         pad_len=pad_len, config=cfg,
+                                         backend=None)
+                x = jax.device_put(block, devices[i])
+                fn = jax.jit(repeated(base, reps))
+                jax.block_until_ready(fn(x))   # compile
+                cached = (fn, x)
+                self._probe_fns[key] = cached
+            fn, x = cached
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(x))
+                best = min(best, time.perf_counter() - t0)
+            times.append(best)
+        return times
+
+    def _observe(self, call: int) -> None:
+        for g, t in enumerate(self._probe_group_times()):
+            self.monitor.record(g, t)
+        self._probe_rounds += 1
+        if self._probe_rounds < self.min_probe_rounds:
+            return   # single noisy rounds must not look like drift
+        if self._calls <= self._cooldown_until:
+            return
+        slow = self.monitor.slow_groups()
+        if slow:
+            self._replan(call, slow)
+
+    # ---- drift recovery: degraded-FPM re-plan + hot-swap ----
+
+    def _d_even(self) -> np.ndarray:
+        return np.full(self.p, self.n // self.p, dtype=np.int64)
+
+    def _baseline_fpms(self) -> FPMSet:
+        """The healthy per-device FPMs the degradation folds into: the
+        user's, or a flat nominal-rate synthetic set (drift is relative,
+        so a flat baseline still yields correctly-shaped degraded FPMs)."""
+        if self.fpms is not None and self.fpms.p == self.p:
+            return self.fpms
+        n_loc = max(self.n // self.p, 1)
+        xs = np.array(sorted({1, n_loc, self.n}))
+        pow2 = 1 << int(np.ceil(np.log2(max(self.n, 2))))
+        ys = np.array(sorted({self.n, pow2, 2 * pow2}))
+        params = self.retune_params or CostParams.for_backend()
+        speed = np.full((len(xs), len(ys)), params.nominal_flops)
+        return FPMSet([SpeedFunction(xs, ys, speed.copy(), name=f"dev{i}")
+                       for i in range(self.p)])
+
+    def _pad_lengths(self, fpms: FPMSet):
+        d = self._d_even()
+        if self.method == "fpm-pad":
+            from repro.plan.pads import fpm_pad_lengths
+            return fpm_pad_lengths(fpms, d, self.n)
+        if self.method == "fpm-czt":
+            from repro.plan.pads import czt_fft_lengths
+            return czt_fft_lengths(fpms, d, self.n, limit_ratio=2.0)
+        return None
+
+    def _degraded_key(self, rel: np.ndarray, pads) -> tuple[str, str]:
+        """(wisdom key, topology digest) for a drift re-plan.
+
+        The degradation signature — relative speeds quantised to 1/16 —
+        digests into the key's ``part=`` detail, so a recurring drift
+        pattern is served from wisdom while the *healthy* plan's entry
+        (no such detail, or the FPM partition digest) is never
+        overwritten by a degraded pick.
+        """
+        panels = dist_panel_space(self.n, self.p)
+        topo = topology_digest(self.mesh, self.axis_name, panels=panels)
+        rel_q = np.asarray(np.round(np.asarray(rel) * 16.0), dtype=np.int64)
+        detail = partition_digest(np.concatenate([self._d_even(), rel_q]),
+                                  pads)
+        key = wisdom_key(n=self.n, dtype=np.dtype(self.dtype).name, p=self.p,
+                         method=self.method, backend=jax.default_backend(),
+                         detail=f"degraded-{detail}", topology=topo)
+        return key, topo
+
+    def _replan(self, call: int, slow: list[int]) -> None:
+        detect_wall = time.time()
+        rel = self.monitor.relative_speeds()
+        degraded = self.monitor.degraded_fpms(self._baseline_fpms())
+        self.last_degraded_fpms = degraded
+        pad_strategy = _PAD_STRATEGY[self.method]
+        pads = self._pad_lengths(degraded)
+        key, topo = self._degraded_key(rel, pads)
+        t0 = time.perf_counter()
+
+        schedule = None
+        source = None
+        info: dict = {}
+        if self.wisdom is not None:
+            hit = lookup_wisdom(self.wisdom, key)
+            if hit is not None:
+                cand, _entry = hit
+                if isinstance(cand, SegmentSchedule):
+                    ok = (cand.n == self.n
+                          and cand.matches(self._d_even(), pads)
+                          and all(e.config.pad == pad_strategy
+                                  for e in cand))
+                    if ok:
+                        try:
+                            if cand.common_config is None:
+                                device_group_program(cand, self.p)
+                        except ValueError:
+                            ok = False
+                    if ok:
+                        schedule, source = cand, "wisdom"
+
+        if schedule is None:
+            def _tune():
+                return tune_dist_schedule(
+                    self.n, self.mesh, self.axis_name, pad_lengths=pads,
+                    mode=self.retune_mode, pad=pad_strategy, fpms=degraded,
+                    params=self.retune_params, dtype=np.dtype(self.dtype),
+                    measure_retries=self.measure_retries)
+            schedule, info = retry_with_backoff(_tune, attempts=2,
+                                               base_s=0.1)
+            source = self.retune_mode
+            if self.wisdom is not None and self.retune_mode == "measure" \
+                    and info.get("time_s") is not None:
+                try:
+                    record_wisdom(self.wisdom, key, schedule, mode="measure",
+                                  time_s=info["time_s"],
+                                  extra={"topology": topo,
+                                         "origin": "resilient-replan"},
+                                  retries=2,
+                                  lock_timeout_s=self.wisdom_lock_timeout_s)
+                except (TimeoutError, OSError) as err:
+                    # An advisory store must never stall recovery.
+                    self.events.append({"kind": "wisdom_error",
+                                        "call": call, "wall": time.time(),
+                                        "error": repr(err)})
+
+        replan_s = time.perf_counter() - t0
+        event = {
+            "kind": "replan", "call": call, "wall": detect_wall,
+            "detect_wall": detect_wall,
+            "slow_groups": [int(g) for g in slow],
+            "relative_speeds": [float(v) for v in rel],
+            "replan_s": float(replan_s), "source": source,
+            "chosen": info.get("chosen"),
+            "schedule": schedule.describe(),
+            "wisdom_key": key, "swap_call": None,
+        }
+        self.events.append(event)
+        self.monitor.reset()
+        self._probe_rounds = 0
+        self._cooldown_until = self._calls + self.cooldown
+        if schedule == self.plan.schedule:
+            event["kind"] = "replan_noop"   # same plan: nothing to swap
+            event["swap_call"] = call
+            return
+        tuning = {"mode": self.retune_mode, "source": source,
+                  "wisdom_key": key, "topology": topo}
+        self._pending = self.plan.with_schedule(schedule, tuning=tuning)
+
+    # ---- loss recovery: rebuild mesh, serve-or-retune, reshard ----
+
+    def _recover_device_loss(self, err: DeviceLostError, call: int) -> None:
+        t0 = time.perf_counter()
+        axis_devices = list(self.mesh.devices.flat)
+        old_p = self.p
+        lost = sorted({int(i) for i in getattr(err, "lost", ()) or ()
+                       if 0 <= int(i) < old_p})
+        if lost:
+            survivors = [d for i, d in enumerate(axis_devices)
+                         if i not in lost]
+        else:
+            live = set(jax.devices())
+            survivors = [d for d in axis_devices if d in live]
+        if not survivors:
+            raise err
+        rebuilt = rebuild_fft_mesh(self.n, survivors,
+                                   axis_name=self.axis_name)
+        kept = [i for i in range(old_p) if i not in lost][:rebuilt.used]
+        self.mesh = rebuilt.mesh
+        if self.fpms is not None and self.fpms.p == old_p:
+            self.fpms = FPMSet([self.fpms[i] for i in kept])
+        self.monitor = StragglerMonitor(rebuilt.used, alpha=self.alpha,
+                                        threshold=self.drift_threshold)
+        self._probe_rounds = 0
+        self._probe_fns.clear()
+        self._pending = None
+        self._cooldown_until = self._calls + self.cooldown
+        # Serve-or-retune: plan_pfft keys wisdom by the *new* mesh's
+        # topology_digest — a reduced topology measured once is served
+        # with zero re-measurement on the next loss to the same shape.
+        self.plan = plan_pfft(self.n, fpms=self.fpms, method=self.method,
+                              eps=self.eps, tune=self.tune,
+                              wisdom=self.wisdom, dtype=self.dtype,
+                              mesh=self.mesh, axis_name=self.axis_name)
+        if self._state is not None:
+            self._state = reshard(self._state, self.mesh, self._state_specs)
+        self.events.append({
+            "kind": "device_loss", "call": call, "wall": time.time(),
+            "lost": lost, "survivors": len(survivors),
+            "devices": rebuilt.used, "dropped": rebuilt.dropped,
+            "topology": self.plan.tuning.get("topology"),
+            "plan_source": self.plan.tuning.get("source"),
+            "recover_s": float(time.perf_counter() - t0),
+        })

@@ -37,6 +37,12 @@ class StragglerMonitor:
             self._ewma[group] = (self.alpha * step_time
                                  + (1 - self.alpha) * self._ewma[group])
 
+    def reset(self) -> None:
+        """Forget all observations.  The self-healing runtime calls this
+        after a hot-swap: the drift that triggered the re-plan must not
+        re-trigger against the new schedule's (different) step times."""
+        self._ewma = np.full(self.n_groups, np.nan)
+
     @property
     def ewma(self) -> np.ndarray:
         return self._ewma.copy()
@@ -48,9 +54,36 @@ class StragglerMonitor:
         return [i for i, t in enumerate(self._ewma) if t > self.threshold * med]
 
     def relative_speeds(self) -> np.ndarray:
-        """Normalised observed speeds (1.0 = median group)."""
-        med = float(np.median(self._ewma))
-        return med / self._ewma
+        """Normalised observed speeds (1.0 = median group).
+
+        Groups without a sample yet are neutral 1.0 — the same warm-up
+        guard ``slow_groups`` has, so a partially-warmed monitor never
+        leaks NaN into FPM synthesis (the median is taken over the
+        sampled groups only)."""
+        rel = np.ones(self.n_groups)
+        seen = ~np.isnan(self._ewma)
+        if not seen.any():
+            return rel
+        med = float(np.median(self._ewma[seen]))
+        if med > 0:
+            rel[seen] = med / self._ewma[seen]
+        return rel
+
+    def degraded_fpms(self, base: SpeedFunction | FPMSet) -> FPMSet:
+        """Per-group speed functions with the observed drift folded in.
+
+        Group ``i``'s baseline speed grid (its own ``FPMSet`` entry, or a
+        shared ``SpeedFunction``) is scaled by its observed relative
+        speed — the paper's heterogeneous-FPM input, synthesised online.
+        This is what the self-healing re-planner hands to
+        ``tune_dist_schedule``."""
+        rel = self.relative_speeds()
+        fns = []
+        for i in range(self.n_groups):
+            f = base[i] if isinstance(base, FPMSet) else base
+            fns.append(SpeedFunction(f.xs, f.ys, f.speed * rel[i],
+                                     name=f"group{i}"))
+        return FPMSet(fns)
 
     def repartition(self, base_fpm: SpeedFunction, n_rows: int,
                     y: int) -> PartitionResult | None:
@@ -59,11 +92,6 @@ class StragglerMonitor:
         repartition is needed (keeps the current distribution stable)."""
         if not self.slow_groups():
             return None
-        rel = self.relative_speeds()
-        fpms = FPMSet([
-            SpeedFunction(base_fpm.xs, base_fpm.ys, base_fpm.speed * rel[i],
-                          name=f"group{i}")
-            for i in range(self.n_groups)
-        ])
-        curves = [f.time_curve(n_rows, y) for f in fpms]
+        curves = [f.time_curve(n_rows, y)
+                  for f in self.degraded_fpms(base_fpm)]
         return hpopta(curves, n_rows)

@@ -1,0 +1,196 @@
+"""Fault-injection layer: deterministic, un-optimizable, reversible.
+
+The chaos harness is only trustworthy if the faults themselves are: the
+``repeated`` slowdown must be bit-identical to the unfaulted program
+(else a recovery test can't tell corruption from injection), one-shot
+failures must fire exactly once, and the wisdom-store chaos must drive
+the retry/timeout paths it exists to exercise.
+"""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.plan.config import PlanConfig
+from repro.plan.wisdom import (load_wisdom, lookup_wisdom, record_wisdom,
+                               wisdom_key)
+from repro.runtime.faults import (DeviceLostError, FaultInjector,
+                                  corrupt_wisdom, get_injector, inject,
+                                  locked_wisdom, repeated,
+                                  retry_with_backoff)
+
+
+# ------------------------------------------------------------- repeated
+
+def test_repeated_bit_identical_under_jit():
+    """The slowdown multiplies wall time, never changes the answer: the
+    exact power-of-two rescale keeps every repeat's output bit-equal for
+    a linear fn, so the fold is exact."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray((rng.standard_normal((8, 32))
+                     + 1j * rng.standard_normal((8, 32))).astype("complex64"))
+    base = jnp.fft.fft
+    for reps in (1, 2, 3, 5, 8):
+        slowed = jax.jit(repeated(base, reps))
+        np.testing.assert_array_equal(np.asarray(slowed(x)),
+                                      np.asarray(jax.jit(base)(x)))
+
+
+def test_repeated_reps_leq_one_is_identity():
+    fn = lambda x: x
+    assert repeated(fn, 1) is fn
+    assert repeated(fn, 0) is fn
+
+
+# ------------------------------------------------------------- injector
+
+def test_injector_slow_group_epoch_and_repeats():
+    inj = FaultInjector()
+    e0 = inj.epoch
+    assert inj.local_repeats(4) is None           # zero-overhead path
+    inj.slow_group(2, 3)
+    assert inj.epoch == e0 + 1                    # traced programs rebuild
+    assert inj.local_repeats(4) == [1, 1, 3, 1]
+    assert inj.repeat_for(2) == 3 and inj.repeat_for(0) == 1
+    inj.slow_group(2, 1)                          # factor <= 1 clears
+    assert inj.local_repeats(4) is None
+    assert inj.epoch == e0 + 2
+
+
+def test_injector_fail_execute_is_one_shot():
+    inj = FaultInjector()
+    inj.fail_execute(5, lost=(1,))
+    inj.check_execute(4)                          # other calls untouched
+    with pytest.raises(DeviceLostError) as err:
+        inj.check_execute(5)
+    assert err.value.lost == (1,)
+    inj.check_execute(5)                          # fired once, now clear
+    assert not inj.active
+
+
+def test_inject_context_clears_and_bumps_epoch():
+    inj = get_injector()
+    e0 = inj.epoch
+    with inject() as scoped:
+        assert scoped is inj
+        scoped.slow_group(0, 4)
+        assert scoped.active
+    assert not inj.active
+    assert inj.epoch > e0 + 1    # the clear itself re-traces slowdowns
+    assert any(ev["kind"] == "slow_group" for ev in inj.log)
+
+
+# ---------------------------------------------------------------- retry
+
+def test_retry_with_backoff_recovers_and_exhausts():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry_with_backoff(flaky, attempts=3, base_s=0.05,
+                              sleep=sleeps.append) == "ok"
+    assert sleeps == [0.05, 0.1]
+
+    def always():
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError, match="permanent"):
+        retry_with_backoff(always, attempts=2, sleep=sleeps.append)
+
+
+# ---------------------------------------------------------- wisdom chaos
+
+def _key():
+    return wisdom_key(n=32, dtype="complex64", p=2, method="lb",
+                      backend="cpu")
+
+
+def test_corrupt_wisdom_is_a_miss_and_rewritable(tmp_path):
+    path = str(tmp_path / "w.json")
+    record_wisdom(path, _key(), PlanConfig(), mode="estimate")
+    assert lookup_wisdom(path, _key()) is not None
+    corrupt_wisdom(path)
+    assert load_wisdom(path) == {}                # miss, never an error
+    assert lookup_wisdom(path, _key()) is None
+    record_wisdom(path, _key(), PlanConfig(radix=2), mode="estimate")
+    plan, _ = lookup_wisdom(path, _key())
+    assert plan == PlanConfig(radix=2)            # store healed by rewrite
+    with open(path) as fh:
+        json.load(fh)                             # valid JSON again
+
+
+def test_record_wisdom_write_retry(tmp_path, monkeypatch):
+    path = str(tmp_path / "w.json")
+    real_replace = os.replace
+    fails = {"n": 2}
+
+    def flaky_replace(src, dst):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("EIO")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", flaky_replace)
+    monkeypatch.setattr(time, "sleep", lambda s: None)
+    with pytest.raises(OSError):
+        record_wisdom(path, _key(), PlanConfig(), mode="estimate", retries=1)
+    fails["n"] = 2
+    record_wisdom(path, _key(), PlanConfig(), mode="estimate", retries=2)
+    assert lookup_wisdom(path, _key()) is not None
+
+
+def test_locked_wisdom_times_out_then_succeeds(tmp_path):
+    """flock attaches to the open file description, so a lock held in
+    this same process genuinely contends: record_wisdom's bounded wait
+    must raise TimeoutError while held and succeed after release."""
+    pytest.importorskip("fcntl")
+    path = str(tmp_path / "w.json")
+    with locked_wisdom(path):
+        with pytest.raises(TimeoutError, match="still held"):
+            record_wisdom(path, _key(), PlanConfig(), mode="estimate",
+                          lock_timeout_s=0.2)
+    record_wisdom(path, _key(), PlanConfig(), mode="estimate",
+                  lock_timeout_s=0.2)
+    assert lookup_wisdom(path, _key()) is not None
+
+
+def test_locked_wisdom_blocking_default_waits(tmp_path):
+    """Without a timeout the writer blocks (historical behavior) and
+    lands once the lock is released."""
+    pytest.importorskip("fcntl")
+    path = str(tmp_path / "w.json")
+    release = threading.Event()
+    done = threading.Event()
+
+    def holder():
+        with locked_wisdom(path):
+            release.set()
+            done.wait(5.0)
+
+    t = threading.Thread(target=holder, daemon=True)
+    t.start()
+    assert release.wait(5.0)
+    writer_done = []
+
+    def writer():
+        record_wisdom(path, _key(), PlanConfig(), mode="estimate")
+        writer_done.append(True)
+
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    time.sleep(0.1)
+    assert not writer_done                        # genuinely blocked
+    done.set()
+    w.join(5.0)
+    assert writer_done and lookup_wisdom(path, _key()) is not None

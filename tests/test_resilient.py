@@ -1,0 +1,226 @@
+"""Self-healing runtime acceptance (ISSUE 6): online re-planning on
+drift, elastic recovery on device loss, all on the forced-4-device rig.
+
+The straggler script is the full loop: a healthy estimate-mode plan
+picks homogeneous; an injected 3x slowdown of one device group is
+*detected* by the probe EWMA, re-tuned with the monitor's degraded FPMs
+— flipping the grouped-vs-homogeneous makespan race to the heterogeneous
+device-group program — and hot-swapped at the next call boundary, with
+the detect/re-plan/swap event recorded.  The recovered schedule equals
+the from-scratch oracle tuned against the same degraded FPMs (identity,
+so the <= 25% makespan acceptance bound holds by construction — on a
+shared-core CPU rig wall-clock races between the two would only measure
+scheduler noise).
+
+The device-loss script: a raised ``DeviceLostError`` mid-stream rebuilds
+the mesh from survivors (4 -> 3, N=48 stays divisible), re-keys wisdom
+by the new ``topology_digest``, re-shards registered in-flight state,
+and retries the failed call; a second runtime on the reduced topology is
+served from wisdom with zero re-measurement.
+"""
+
+import numpy as np
+import pytest
+
+
+# ---------------------------------------------------------- in-process
+
+def test_baseline_fpms_synthesized_when_absent():
+    """Without user FPMs the re-planner still needs a baseline to fold
+    drift into — a flat nominal-rate set of the right arity."""
+    from repro.runtime.resilient import ResilientPlan
+
+    class _P(ResilientPlan):
+        def __init__(self):
+            self.n, self.fpms, self.retune_params = 48, None, None
+
+        @property
+        def p(self):
+            return 4
+
+    fpms = _P()._baseline_fpms()
+    assert fpms.p == 4
+    assert all(np.isfinite(f.speed).all() for f in fpms)
+
+
+def test_degraded_wisdom_key_isolated_from_healthy():
+    """A degraded re-plan's wisdom entry must never collide with the
+    healthy plan's key, and the same quantized drift signature must map
+    to the same key (so recurring drift serves from the store)."""
+    from repro.runtime.resilient import ResilientPlan
+
+    class _P(ResilientPlan):
+        def __init__(self):
+            self.n, self.method, self.dtype = 48, "lb", "complex64"
+            self.axis_name = "fft"
+            from repro.launch.mesh import make_fft_mesh
+            self.mesh = make_fft_mesh(1)
+
+        @property
+        def p(self):
+            return 4
+
+    rp = _P()
+    k1 = rp._degraded_key(np.array([1.0, 1.0, 1.0, 0.33]), None)[0]
+    k2 = rp._degraded_key(np.array([1.0, 1.0, 1.0, 0.34]), None)[0]
+    k3 = rp._degraded_key(np.array([1.0, 1.0, 1.0, 0.50]), None)[0]
+    assert "degraded-" in k1
+    assert k1 == k2          # 1/16 quantization: same signature
+    assert k1 != k3
+    from repro.plan.wisdom import topology_digest, wisdom_key
+    healthy = wisdom_key(n=48, dtype="complex64", p=4, method="lb",
+                         backend="cpu",
+                         topology=topology_digest(rp.mesh, "fft"))
+    assert k1 != healthy
+
+
+# --------------------------------------------- forced-4-device scripts
+
+STRAGGLER_SCRIPT = r"""
+import dataclasses
+import numpy as np
+import jax
+from repro.core.fpm import FPMSet, SpeedFunction
+from repro.plan.cost import CostParams
+from repro.plan.tune import tune_dist_schedule
+from repro.runtime.faults import inject
+from repro.runtime.resilient import ResilientPlan
+
+n = 48
+xs = np.array(sorted({1, n // 4, n}))
+ys = np.array(sorted({48, 64, 128}))
+# devices 0-2: slow-ish, pow2-peaked -> pad to 64, kernel-eligible;
+# device 3: fast and flat -> stays at 48, library-FFT-only candidates.
+peaked = np.tile([2e8, 8e8, 2e8], (len(xs), 1))
+flat = np.full((len(xs), len(ys)), 4e9)
+fpms = FPMSet([SpeedFunction(xs, ys, peaked.copy(), name=f"d{i}")
+               for i in range(3)]
+              + [SpeedFunction(xs, ys, flat, name="d3")])
+# Constants sized so the switch-dispatch overhead beats the healthy
+# makespan savings (homogeneous wins) but loses once device 0 drifts
+# (heterogeneous wins) — the re-plan is *caused* by the detection.
+params = dataclasses.replace(
+    CostParams.for_backend("cpu"),
+    backend_factor={"xla": 1.0, "stockham": 0.25, "pallas": 300.0},
+    dispatch_overhead_s=1e-5)
+
+rng = np.random.default_rng(0)
+x = (rng.standard_normal((n, n))
+     + 1j * rng.standard_normal((n, n))).astype("complex64")
+
+with inject() as inj:
+    rp = ResilientPlan(n, method="fpm-pad", fpms=fpms, tune="estimate",
+                       retune_params=params, alpha=0.6,
+                       drift_threshold=1.3, cooldown=2)
+    assert rp.plan.tuning.get("chosen") == "homogeneous", rp.plan.tuning
+    assert len(rp.schedule.configs) == 1
+    out0 = np.asarray(rp.execute(x))
+
+    inj.slow_group(0, 3)
+    swap = None
+    for _ in range(30):
+        out = rp.execute(x)
+        swaps = [e for e in rp.events
+                 if e["kind"] == "replan" and e.get("swap_call") is not None
+                 and e.get("chosen") == "heterogeneous"]
+        if swaps:
+            swap = swaps[0]
+            break
+    assert swap is not None, f"no heterogeneous hot-swap: {rp.events}"
+
+    # detection saw the drift on the right group, with real magnitude
+    assert 0 in swap["slow_groups"], swap
+    assert swap["relative_speeds"][0] < 0.7, swap
+    assert swap["replan_s"] > 0 and swap["swap_call"] > swap["call"]
+
+    # the swapped plan is a genuinely grouped device-group program
+    assert len(rp.schedule.configs) == 2, rp.schedule.describe()
+    assert rp.plan.tuning.get("source") == "estimate"
+
+    # correctness is preserved across the hot swap (both programs run
+    # the same uniform-length crop semantics)
+    out1 = np.asarray(rp.execute(x))
+    np.testing.assert_allclose(out1, out0, atol=1e-2)
+
+    # acceptance: recovered steady-state equals the from-scratch oracle
+    # tuned against the same degraded FPMs -> within any makespan bound
+    degraded = rp.last_degraded_fpms
+    assert degraded is not None and degraded.p == 4
+    oracle, _ = tune_dist_schedule(
+        n, rp.mesh, "fft", pad_lengths=rp._pad_lengths(degraded),
+        mode="estimate", pad="fpm", fpms=degraded, params=params)
+    assert oracle == rp.schedule, (oracle.describe(),
+                                   rp.schedule.describe())
+print("RESILIENT_STRAGGLER_OK")
+"""
+
+
+LOSS_SCRIPT = r"""
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.runtime.faults import inject
+from repro.runtime.resilient import ResilientPlan
+
+n = 48
+W = "WISDOM_PATH"
+rng = np.random.default_rng(1)
+x = (rng.standard_normal((n, n))
+     + 1j * rng.standard_normal((n, n))).astype("complex64")
+ref = np.fft.fft2(x)
+
+with inject() as inj:
+    rp = ResilientPlan(n, method="lb", tune="measure", wisdom=W)
+    assert rp.p == 4
+    topo4 = rp.plan.tuning.get("topology")
+    out = rp.execute(x)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-2)
+
+    rp.register_state({"acc": jnp.zeros((n, n), "complex64")},
+                      {"acc": P("fft", None)})
+    inj.fail_execute(rp.calls, lost=(3,))
+    out = rp.execute(x)    # raises inside, recovers, retries same call
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-2)
+
+    ev = [e for e in rp.events if e["kind"] == "device_loss"]
+    assert len(ev) == 1, rp.events
+    ev = ev[0]
+    assert ev["lost"] == [3] and ev["devices"] == 3 and ev["dropped"] == 0
+    assert ev["recover_s"] > 0
+
+    # the rebuilt mesh is a distinct wisdom topology
+    topo3 = ev["topology"]
+    assert topo3 is not None and topo3 != topo4, (topo3, topo4)
+    assert rp.p == 3
+
+    # registered in-flight state was re-sharded onto the rebuilt mesh
+    assert rp.state["acc"].sharding.mesh.shape["fft"] == 3
+
+# zero re-measurement on the reduced topology: poison every measure
+# entry point, then plan again on a fresh 3-device mesh — wisdom serves.
+import repro.plan.tune as tune_mod
+def boom(*a, **k):
+    raise AssertionError("re-measured a wisdom-served topology")
+tune_mod.measure_dist_configs = boom
+tune_mod._measure_local_phase = boom
+from repro.launch.mesh import make_fft_mesh
+rp2 = ResilientPlan(n, method="lb", tune="measure", wisdom=W,
+                    mesh=make_fft_mesh(3))
+assert rp2.plan.tuning.get("source") == "wisdom", rp2.plan.tuning
+out2 = rp2.execute(x)
+np.testing.assert_allclose(np.asarray(out2), ref, atol=1e-2)
+print("RESILIENT_ELASTIC_OK")
+"""
+
+
+def test_straggler_replan_and_hot_swap(dist_subprocess):
+    dist_subprocess(STRAGGLER_SCRIPT, devices=4,
+                    sentinel="RESILIENT_STRAGGLER_OK")
+
+
+def test_device_loss_recovery_and_wisdom_rekey(dist_subprocess, tmp_path):
+    script = LOSS_SCRIPT.replace("WISDOM_PATH",
+                                 str(tmp_path / "wisdom.json"))
+    dist_subprocess(script, devices=4, sentinel="RESILIENT_ELASTIC_OK")

@@ -9,11 +9,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainCfg
-from repro.core.fpm import SpeedFunction
+from repro.core.fpm import FPMSet, SpeedFunction
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.models.registry import get_smoke_config
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.elastic import largest_grid, rebuild_mesh, reshard
+from repro.runtime.elastic import (largest_fft_axis, largest_grid,
+                                   rebuild_fft_mesh, rebuild_mesh, reshard)
 from repro.runtime.straggler import StragglerMonitor
 from repro.train.step import init_train_state, make_train_step
 
@@ -51,6 +52,56 @@ def test_checkpoint_atomic_no_partial_dirs(tmp_path):
     mgr.save(7, {"x": jnp.zeros(4)})
     names = os.listdir(tmp_path)
     assert all(not n.endswith(".tmp") for n in names)
+
+
+def test_checkpoint_async_write_failure_surfaces_on_wait(tmp_path):
+    """A background write that dies must not vanish with its thread:
+    wait() re-raises the failure — exactly once — and the manager keeps
+    working afterwards."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    real_write = mgr._write
+
+    def boom(step, flat, meta):
+        raise OSError("disk full")
+
+    mgr._write = boom
+    mgr.save(1, {"x": jnp.zeros(2)}, blocking=False)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    mgr.wait()  # error was consumed: loud exactly once
+    mgr._write = real_write
+    mgr.save(2, {"x": jnp.zeros(2)}, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_async_write_failure_surfaces_on_next_save(tmp_path):
+    """save(blocking=False) waits for the previous write first, so a
+    died write surfaces there even when the caller never calls wait()."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    def boom(step, flat, meta):
+        raise OSError("quota exceeded")
+
+    mgr._write = boom
+    mgr.save(1, {"x": jnp.zeros(2)}, blocking=False)
+    if mgr._thread is not None:
+        mgr._thread.join()  # let the failure land without consuming it
+    with pytest.raises(OSError, match="quota exceeded"):
+        mgr.save(2, {"x": jnp.zeros(2)}, blocking=False)
+
+
+def test_checkpoint_steps_skips_stray_dirnames(tmp_path):
+    """Stray ``step_*`` names (user backups, editor droppings, in-flight
+    tmp dirs) must be skipped, not crash ``int()`` in the listing."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(3, {"x": jnp.zeros(1)})
+    mgr.save(11, {"x": jnp.zeros(1)})
+    for stray in ("step_backup", "step_5~", "step_000000000007.tmp",
+                  "notes.txt"):
+        os.makedirs(tmp_path / stray)
+    assert mgr.steps() == [3, 11]
+    assert mgr.latest_step() == 11
 
 
 def test_kill_restart_continues_loss_curve(tmp_path):
@@ -125,6 +176,48 @@ def test_straggler_no_action_when_healthy():
     assert mon.repartition(base, 8, 16) is None
 
 
+def test_straggler_relative_speeds_before_warmup():
+    """A partially-warmed monitor must stay neutral, never leak NaN —
+    the guard slow_groups() always had, applied to relative_speeds()."""
+    mon = StragglerMonitor(n_groups=4)
+    rel = mon.relative_speeds()           # no samples at all
+    assert not np.any(np.isnan(rel))
+    np.testing.assert_array_equal(rel, np.ones(4))
+    mon.record(0, 2.0)                    # one of four groups sampled
+    mon.record(1, 1.0)
+    rel = mon.relative_speeds()
+    assert not np.any(np.isnan(rel))
+    np.testing.assert_array_equal(rel[2:], [1.0, 1.0])  # unsampled: neutral
+    assert rel[0] < rel[1]                # sampled groups still ranked
+    xs = np.array([1, 8]); ys = np.array([16])
+    fpms = mon.degraded_fpms(SpeedFunction(xs, ys, np.ones((2, 1))))
+    assert all(np.isfinite(f.speed).all() for f in fpms)
+
+
+def test_straggler_reset_forgets_drift():
+    mon = StragglerMonitor(n_groups=2, threshold=1.3)
+    for _ in range(5):
+        mon.record(0, 1.0)
+        mon.record(1, 3.0)
+    assert mon.slow_groups() == [1]
+    mon.reset()
+    assert mon.slow_groups() == []        # drift must not re-trigger
+    np.testing.assert_array_equal(mon.relative_speeds(), np.ones(2))
+
+
+def test_straggler_degraded_fpms_per_group_scaling():
+    mon = StragglerMonitor(n_groups=2)
+    for _ in range(8):
+        mon.record(0, 1.0)
+        mon.record(1, 2.0)
+    xs = np.array([1, 8]); ys = np.array([16, 32])
+    base = SpeedFunction(xs, ys, np.full((2, 2), 1e9))
+    degraded = mon.degraded_fpms(base)
+    assert degraded.p == 2
+    ratio = degraded[1].speed / degraded[0].speed
+    np.testing.assert_allclose(ratio, 0.5, rtol=1e-6)
+
+
 # --------------------------------------------------------------- elastic
 
 def test_largest_grid():
@@ -134,8 +227,49 @@ def test_largest_grid():
     assert largest_grid(1, 16) == (1, 1)
 
 
+def test_largest_grid_non_power_of_two():
+    """Non-pow2 survivor counts / model axes: halving must bottom out at
+    a usable grid, never a zero axis."""
+    assert largest_grid(5, 3) == (1, 3)      # 3 of 5 survivors fit
+    assert largest_grid(2, 3) == (2, 1)      # model axis halves 3->1
+    assert largest_grid(6, 4) == (1, 4)
+    assert largest_grid(7, 16) == (1, 4)    # 16 halves to the largest fit
+    for n, m in [(5, 3), (2, 3), (6, 4), (7, 16), (1, 1)]:
+        data, model = largest_grid(n, m)
+        assert data >= 1 and model >= 1 and data * model <= n
+
+
+def test_rebuild_mesh_reports_dropped_survivors():
+    res = rebuild_mesh(model_axis=1)
+    n = len(jax.devices())
+    assert res.used + res.dropped == n
+    assert res.mesh.devices.size == res.used
+    # an awkward model axis: whatever grid is found, every surviving
+    # device is either placed or counted as dropped — none vanish
+    res2 = rebuild_mesh(model_axis=max(2 * n - 1, 1))
+    assert res2.used >= 1
+    assert res2.used + res2.dropped == n
+    assert res2.mesh.devices.size == res2.used
+
+
+def test_largest_fft_axis_divisibility():
+    assert largest_fft_axis(4, 48) == 4
+    assert largest_fft_axis(3, 48) == 3      # non-pow2 axis kept
+    assert largest_fft_axis(5, 48) == 4      # 5 does not divide 48
+    assert largest_fft_axis(7, 48) == 6
+    assert largest_fft_axis(1, 48) == 1
+    assert largest_fft_axis(4, 7) == 1       # prime N: no parallel axis
+
+
+def test_rebuild_fft_mesh_local_devices():
+    res = rebuild_fft_mesh(48)
+    assert res.mesh.shape["fft"] == res.used
+    assert 48 % res.used == 0
+    assert res.used + res.dropped == len(jax.devices())
+
+
 def test_rebuild_and_reshard_on_local_devices():
-    mesh = rebuild_mesh(model_axis=1)
+    mesh = rebuild_mesh(model_axis=1).mesh
     assert mesh.devices.size >= 1
     from jax.sharding import PartitionSpec as P
     tree = {"w": jnp.arange(8.0)}
