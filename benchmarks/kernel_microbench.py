@@ -38,6 +38,20 @@ acceptance checks assert on):
                the record carries the grouped-vs-homogeneous makespan
                delta and the measured winner warms the same v3 topology
                key ``plan_pfft(mesh=..., method="fpm-pad")`` consults.
+  rfft         the real-input half-spectrum pipeline vs the upcast-and-
+               crop complex fallback: interleaved wall-time race of both
+               limbs, the structural p=4 comm-bytes delta (half-spectrum
+               panels vs full panels), and the measure-tuned family pick
+               (wisdom-warmed under the ``rfft-lb`` keys ``plan_pfft``
+               looks up).  On a multi-device host an ``rfft-dist`` record
+               races both families end to end through the distributed
+               pipelines and carries the measured comm sample.
+
+Every record is labeled with the backend it was measured on and whether
+the Pallas kernels ran in interpret mode, and an existing output file
+holding accelerator-tagged records is never overwritten by interpreter
+timings (``--force`` overrides — interpreter numbers say nothing about
+hardware and must not masquerade as it).
 
 ``--wisdom W`` writes each benched size's best *measured* config into the
 wisdom store ``W`` (keyed exactly as ``plan_pfft`` keys its lookups), so a
@@ -402,8 +416,112 @@ def bench_hetero_dist(sizes, wisdom_path: str | None = None) -> list[dict]:
     return recs
 
 
+def bench_rfft(sizes, wisdom_path: str | None = None) -> list[dict]:
+    """Real-input pipeline vs the upcast-and-crop complex fallback.
+
+    Both limbs deliver the same (N, N//2+1) half spectrum, so the race is
+    apples-to-apples: ``measure_rfft_configs`` interleaves them through
+    the tuner's own min-of-rounds harness.  The comm-bytes columns are
+    structural (``dist_comm_bytes`` at p=4 — the half-spectrum panel is
+    ~half the full panel regardless of host), so the record pins the
+    comm win even on a 1-device container; on a multi-device host an
+    ``rfft-dist`` record adds the *measured* end-to-end race and comm
+    sample.  The measure-tuned pick warms wisdom under the same
+    ``method="rfft-lb"`` keys ``plan_pfft`` consults.
+    """
+    import jax
+    from repro.plan import measure_rfft_configs, tune_rfft
+
+    backend = jax.default_backend()
+    recs = []
+    for n in sizes:
+        real_cfg = PlanConfig(real=True)
+        cplx_cfg = PlanConfig()
+        times = measure_rfft_configs([real_cfg, cplx_cfg], n, rounds=20)
+        t_real, t_cplx = times[real_cfg], times[cplx_cfg]
+        cb_c = dist_comm_bytes(n, 4)
+        cb_r = dist_comm_bytes(n, 4, real=True)
+        sched, info = tune_rfft(n, mode="measure", top_k=2, reps=5)
+        recs.append({
+            "bench": "rfft", "n": int(n),
+            "time_real_s": float(t_real),
+            "time_complex_s": float(t_cplx),
+            "speedup_real": float(t_cplx / t_real),
+            "comm_bytes_real_p4": float(cb_r),
+            "comm_bytes_complex_p4": float(cb_c),
+            "comm_ratio_p4": float(cb_r / cb_c),
+            "tuned_path": info["chosen_path"],
+            "tuned_time_s": float(info["time_s"]),
+        })
+        if wisdom_path:
+            key = wisdom_key(n=n, dtype="float32", p=1, method="rfft-lb",
+                             backend=backend)
+            record_wisdom(wisdom_path, key, sched, mode="measure",
+                          time_s=float(info["time_s"]),
+                          extra={"origin": "kernel_microbench"})
+
+    p = jax.device_count()
+    if p > 1:
+        from repro.launch.mesh import make_fft_mesh
+        from repro.plan import tune_rfft_dist
+
+        mesh = make_fft_mesh(p)
+        for n in sizes:
+            if n % p:
+                continue
+            sched, info = tune_rfft_dist(n, mesh, "fft", mode="measure",
+                                         top_k=2, reps=3)
+            dist = info["dist"]
+            topo = topology_digest(mesh, "fft", panels=dist_panel_space(n, p))
+            recs.append({
+                "bench": "rfft-dist", "n": int(n), "devices": p,
+                "topology": topo,
+                "tuned_path": info["chosen_path"],
+                "comm_bytes_real": dist["comm_bytes_real"],
+                "comm_bytes_complex": dist["comm_bytes_complex"],
+                "comm_ratio_real": dist["comm_ratio_real"],
+                "comm_time_meas_s": dist.get("comm_time_meas_s"),
+                "time_s": float(info["time_s"]),
+            })
+            if wisdom_path:
+                key = wisdom_key(n=n, dtype="float32", p=p,
+                                 method="rfft-lb", backend=backend,
+                                 topology=topo)
+                record_wisdom(wisdom_path, key, sched, mode="measure",
+                              time_s=float(info["time_s"]),
+                              extra={"origin": "kernel_microbench",
+                                     "topology": topo,
+                                     "comm_bytes": dist["comm_bytes"],
+                                     "comm_time_s":
+                                         dist.get("comm_time_meas_s")})
+    return recs
+
+
+def _refuse_accelerator_overwrite(out: str, backend: str,
+                                  force: bool) -> None:
+    """Interpreter timings must never silently replace hardware numbers.
+
+    If ``out`` already holds records tagged with a non-cpu backend and
+    this run is on cpu (interpret-mode Pallas), refuse to overwrite it —
+    the stored numbers are the valuable ones.  ``--force`` overrides.
+    """
+    if force or backend != "cpu" or not os.path.exists(out):
+        return
+    try:
+        with open(out) as f:
+            existing = json.load(f)
+    except (OSError, ValueError):
+        return  # unreadable/legacy file: nothing trustworthy to protect
+    prev = existing.get("backend") if isinstance(existing, dict) else None
+    if prev and prev != "cpu":
+        raise SystemExit(
+            f"{out} holds {prev}-measured records; refusing to overwrite "
+            f"them with cpu interpret-mode timings (--force to override)")
+
+
 def run(quick: bool = False, out: str = DEFAULT_OUT,
-        wisdom: str | None = None, sweeps: str | None = None) -> dict:
+        wisdom: str | None = None, sweeps: str | None = None,
+        force: bool = False) -> dict:
     radix_sizes = [64, 256] if quick else [64, 256, 1024]
     fused_sizes = [64, 128] if quick else [64, 128, 256]
     planner_sizes = [128] if quick else [128, 256]
@@ -420,6 +538,8 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
                                    wisdom_path=wisdom),
         "hetero-dist": lambda: bench_hetero_dist(
             [48] if quick else [48, 96], wisdom_path=wisdom),
+        "rfft": lambda: bench_rfft([64] if quick else [64, 128],
+                                   wisdom_path=wisdom),
     }
     chosen = (list(all_sweeps) if sweeps is None
               else [s.strip() for s in sweeps.split(",") if s.strip()])
@@ -427,13 +547,21 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
     if unknown:
         raise SystemExit(f"unknown sweeps {sorted(unknown)}; "
                          f"choose from {sorted(all_sweeps)}")
+    import jax
+    backend = jax.default_backend()
+    interpret = backend == "cpu"
+    _refuse_accelerator_overwrite(out, backend, force)
     records = []
     for name in chosen:
         records += all_sweeps[name]()
-    import jax
+    for r in records:
+        # Every record says where its numbers came from, so merged or
+        # archived files stay interpretable record by record.
+        r.setdefault("backend", backend)
+        r.setdefault("interpret", interpret)
     payload = {
-        "backend": jax.default_backend(),
-        "interpret_mode": jax.default_backend() == "cpu",
+        "backend": backend,
+        "interpret_mode": interpret,
         "records": records,
     }
     with open(out, "w") as f:
@@ -456,10 +584,13 @@ def main() -> int:
     ap.add_argument("--sweeps", default=None,
                     help="comma-separated subset of "
                          "radix,fused,segments,planner,schedule,dist,"
-                         "hetero-dist (default: all)")
+                         "hetero-dist,rfft (default: all)")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite an output file holding accelerator-"
+                         "tagged records with interpret-mode timings")
     args = ap.parse_args()
     run(quick=args.quick, out=args.out, wisdom=args.wisdom,
-        sweeps=args.sweeps)
+        sweeps=args.sweeps, force=args.force)
     return 0
 
 

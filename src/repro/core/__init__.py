@@ -5,8 +5,10 @@ from repro.core.fpm import SpeedFunction, FPMSet, build_fpm, save_fpms, load_fpm
 from repro.core.partition import PartitionResult, popta, hpopta, lb_partition, partition_rows
 from repro.core.padding import determine_pad_length, smooth_candidates, pad_to_smooth, is_smooth
 from repro.core.pfft import (pfft_lb, pfft_fpm, pfft_fpm_pad, pfft_fpm_czt,
-                             czt_dft, segment_row_ffts, plan_segment_batches)
-from repro.core.api import plan_pfft, PfftPlan
+                             czt_dft, segment_row_ffts, plan_segment_batches,
+                             rpfft_lb, rpfft_fpm, rpfft_fpm_pad,
+                             halfspec_distribution, segment_row_rffts)
+from repro.core.api import plan_pfft, PfftPlan, rfft2, irfft2
 from repro.core.pfft3d import pfft3_lb, pfft3_fpm, pfft3_fpm_pad, pfft3_distributed
 from repro.plan.config import PlanConfig
 
@@ -16,6 +18,8 @@ __all__ = [
     "determine_pad_length", "smooth_candidates", "pad_to_smooth", "is_smooth",
     "pfft_lb", "pfft_fpm", "pfft_fpm_pad", "pfft_fpm_czt", "czt_dft",
     "segment_row_ffts", "plan_segment_batches",
-    "plan_pfft", "PfftPlan", "PlanConfig",
+    "rpfft_lb", "rpfft_fpm", "rpfft_fpm_pad",
+    "halfspec_distribution", "segment_row_rffts",
+    "plan_pfft", "PfftPlan", "rfft2", "irfft2", "PlanConfig",
     "pfft3_lb", "pfft3_fpm", "pfft3_fpm_pad", "pfft3_distributed",
 ]

@@ -49,12 +49,88 @@ from repro.plan.tune import dist_panel_space, tune_dist_schedule, tune_schedule
 from repro.plan.wisdom import (lookup_wisdom, partition_digest, record_wisdom,
                                topology_digest, wisdom_key)
 
-Method = Literal["lb", "fpm", "fpm-pad", "fpm-czt"]
+Method = Literal["lb", "fpm", "fpm-pad", "fpm-czt",
+                 "rfft-lb", "rfft-fpm", "rfft-fpm-pad"]
 TuneMode = Literal["off", "estimate", "measure"]
 
-_PAD_STRATEGY = {"lb": "none", "fpm": "none", "fpm-pad": "fpm", "fpm-czt": "czt"}
+_PAD_STRATEGY = {"lb": "none", "fpm": "none", "fpm-pad": "fpm",
+                 "fpm-czt": "czt",
+                 "rfft-lb": "none", "rfft-fpm": "none", "rfft-fpm-pad": "fpm"}
 
-__all__ = ["PfftPlan", "plan_pfft"]
+# The real-input half-spectrum pipeline: same partition/pad machinery as
+# the base method (the name after the ``rfft-`` prefix), but the plan
+# transforms a real (N, N) signal into its (N, N//2+1) half spectrum and
+# the tuner races the real pipeline against the upcast-and-crop complex
+# fallback — the winning family is recorded in the schedule's ``real``
+# flags and the executor routes on them.  No ``rfft-fpm-czt``: the real
+# pipeline has no Bluestein form.
+_REAL_METHODS = frozenset({"rfft-lb", "rfft-fpm", "rfft-fpm-pad"})
+
+__all__ = ["PfftPlan", "plan_pfft", "rfft2", "irfft2"]
+
+
+def _base_method(method: Method) -> str:
+    """The partitioning family a method uses: ``rfft-fpm-pad`` pads and
+    partitions exactly like ``fpm-pad``; the prefix only changes what the
+    transform delivers."""
+    return method[5:] if method in _REAL_METHODS else method
+
+
+def _ctype_for(dtype: str) -> str:
+    return "complex128" if np.dtype(dtype) == np.dtype(np.float64) \
+        else "complex64"
+
+
+def _build_raw(n: int, method: Method, d: np.ndarray,
+               schedule: SegmentSchedule, mesh, axis_name: str,
+               dtype: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """The un-jitted executor for a resolved schedule.
+
+    Shared by ``plan_pfft`` and ``PfftPlan.with_schedule`` so a hot-swap
+    routes identically to the original plan.  Real methods route on the
+    *winning family*: a ``real``-flagged schedule runs the half-spectrum
+    pipeline, a complex-family winner upcasts and crops to the same
+    (N, N//2+1) deliverable.
+    """
+    if method in _REAL_METHODS:
+        nh = n // 2 + 1
+        ctype = _ctype_for(dtype)
+        if mesh is not None:
+            if schedule.anchor_config.real:
+                from repro.core.pfft_dist import rpfft2_distributed
+
+                def raw(m):
+                    return rpfft2_distributed(m, mesh, axis_name,
+                                              schedule=schedule)
+            else:
+                from repro.core.pfft_dist import pfft2_distributed
+
+                def raw(m):
+                    return pfft2_distributed(m.astype(ctype), mesh,
+                                             axis_name,
+                                             schedule=schedule)[:, :nh]
+        elif schedule.anchor_config.real:
+            from repro.core.pfft import _rpfft_limb
+
+            def raw(m):
+                return _rpfft_limb(m, d, schedule=schedule)
+        else:
+            def raw(m):
+                return _pfft_limb(m.astype(ctype), d,
+                                  schedule=schedule)[:, :nh]
+        return raw
+    if mesh is not None:
+        from repro.core.pfft_dist import pfft2_distributed
+
+        def raw(m):
+            # The full schedule, not just its anchor config: this is what
+            # routes heterogeneous picks to the device-group program (and
+            # per-device FPM pad lengths to the uniform-length rule).
+            return pfft2_distributed(m, mesh, axis_name, schedule=schedule)
+    else:
+        def raw(m):
+            return _pfft_limb(m, d, schedule=schedule)
+    return raw
 
 
 @dataclasses.dataclass
@@ -72,6 +148,9 @@ class PfftPlan:
     # against the same topology (the self-healing hot-swap path).
     mesh: Any = None
     axis_name: str = "fft"
+    # The planned input dtype; real methods need it to rebuild the
+    # upcast-and-crop fallback executor on a hot-swap.
+    dtype: str = "complex64"
     _batched_fns: dict[int, Callable] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
@@ -115,21 +194,11 @@ class PfftPlan:
         the next call boundary.  The swapped program lowers exactly like
         ``plan_pfft`` lowers — distributed plans re-enter
         ``pfft2_distributed`` on the captured mesh, single-host plans
-        re-enter the limb on the captured partition.
+        re-enter the limb on the captured partition (and real-method
+        plans re-route on the swapped schedule's winning family).
         """
-        if self.mesh is not None:
-            from repro.core.pfft_dist import pfft2_distributed
-            mesh, axis_name = self.mesh, self.axis_name
-
-            def raw(m):
-                return pfft2_distributed(m, mesh, axis_name,
-                                         schedule=schedule)
-        else:
-            d = self.partition.d
-
-            def raw(m):
-                return _pfft_limb(m, d, schedule=schedule)
-
+        raw = _build_raw(self.n, self.method, self.partition.d, schedule,
+                         self.mesh, self.axis_name, self.dtype)
         return dataclasses.replace(
             self, schedule=schedule, config=schedule.anchor_config,
             tuning=dict(tuning) if tuning is not None else dict(self.tuning),
@@ -161,13 +230,21 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
     the interconnect constants.
     """
     pad_strategy = _PAD_STRATEGY[method]
+    real = method in _REAL_METHODS
 
     def normalize(cfg: PlanConfig) -> PlanConfig:
         """The method owns the pad semantics: ``plan.config.normalize_pad``
         (shared with the algorithm entry points in ``core.pfft``, so an
         explicit ``PlanConfig()`` on fpm-czt still runs Bluestein and a
-        drifted ``pad="czt"`` on fpm-pad still runs the paper's crop)."""
-        return normalize_pad(cfg, pad_strategy)
+        drifted ``pad="czt"`` on fpm-pad still runs the paper's crop).
+        Real methods also own the transform: an explicit config is
+        real-flagged so the executor runs the half-spectrum pipeline
+        (a tuner-chosen complex fallback keeps its own flag — that flag
+        *is* the race's verdict)."""
+        cfg = normalize_pad(cfg, pad_strategy)
+        if real and not cfg.real:
+            cfg = dataclasses.replace(cfg, real=True)
+        return cfg
 
     tuning: dict[str, Any] = {"mode": tune}
     if config is not None:
@@ -180,7 +257,8 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
     # key — a different model must not be served another model's plan.
     # A mesh additionally digests its topology: a measured distributed
     # plan is a property of the pod it was timed on.
-    detail = partition_digest(part.d, pads) if method != "lb" else None
+    detail = (partition_digest(part.d, pads)
+              if _base_method(method) != "lb" else None)
     topo = panels = None
     if mesh is not None:
         panels = dist_panel_space(n, int(mesh.shape[axis_name]))
@@ -211,10 +289,18 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
                 # (device-group programs), but a hand-edited or drifted
                 # entry mixing program-level knobs is a miss.  The rows
                 # mapping is already guaranteed by matches() above
-                # (the even N/p split tiles every mesh).
-                from repro.core.pfft_dist import validate_spmd_schedule
+                # (the even N/p split tiles every mesh).  A real-family
+                # hit must additionally satisfy the real dist program's
+                # shape (homogeneous, unfused, monolithic) — anything
+                # ``rpfft2_distributed`` would refuse is a miss too.
                 try:
-                    validate_spmd_schedule(schedule)
+                    if schedule.anchor_config.real:
+                        from repro.core.pfft_dist import _validate_real_dist
+                        _validate_real_dist(None, schedule)
+                    else:
+                        from repro.core.pfft_dist import \
+                            validate_spmd_schedule
+                        validate_spmd_schedule(schedule)
                 except ValueError:
                     schedule = None
             if schedule is not None:
@@ -225,7 +311,8 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
     if tune == "off":
         tuning["source"] = "off"
         return SegmentSchedule.homogeneous(
-            PlanConfig(pad=pad_strategy), n, part.d, pads), tuning
+            PlanConfig(pad=pad_strategy, real=real), n, part.d,
+            pads), tuning
 
     params = None
     if wisdom is not None:
@@ -234,7 +321,17 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
         from repro.plan.cost import CostParams
         params = fit_cost_params(wisdom)
         tuning["calibrated"] = params != CostParams.for_backend()
-    if mesh is not None:
+    if real and mesh is not None:
+        from repro.plan.tune import tune_rfft_dist
+        schedule, info = tune_rfft_dist(
+            n, mesh, axis_name, mode=tune, pad=pad_strategy, fpms=fpms,
+            params=params, panels=panels, dtype=np.dtype(dtype))
+    elif real:
+        from repro.plan.tune import tune_rfft
+        schedule, info = tune_rfft(n, d=part.d, pad_lengths=pads,
+                                   fpms=fpms, mode=tune, pad=pad_strategy,
+                                   params=params, dtype=np.dtype(dtype))
+    elif mesh is not None:
         schedule, info = tune_dist_schedule(
             n, mesh, axis_name, pad_lengths=pads, mode=tune,
             pad=pad_strategy, fpms=fpms, params=params, panels=panels,
@@ -285,11 +382,37 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
     ``method="fpm-pad"``/``"fpm-czt"`` require ``fpms`` covering
     exactly the mesh axis (``fpms.p == p``).
 
+    The ``rfft-*`` methods plan the *real-input* transform: ``execute``
+    takes a real (N, N) signal (``dtype='float32'|'float64'`` required)
+    and returns the (N, N//2+1) half spectrum — half the row FFTs (two
+    real rows packed per complex transform) and, distributed, roughly
+    half the all_to_all bytes.  The tuner races the real pipeline
+    against the upcast-and-crop complex fallback and the plan routes on
+    the winner; ``plan.tuning["chosen_path"]`` says which side won.
+
     ``use_stockham=``/``fused=`` are deprecated shims for the pre-planner
     flag API (they build an explicit config, so tuning is skipped).
     """
     if tune not in ("off", "estimate", "measure"):
         raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
+    if method not in _PAD_STRATEGY:
+        raise ValueError(f"unknown method {method!r}")
+    real = method in _REAL_METHODS
+    base = _base_method(method)
+    kind = np.dtype(dtype).kind
+    if real and kind != "f":
+        raise ValueError(
+            f"method={method!r} transforms real input; pass dtype='float32' "
+            f"or 'float64' (got {dtype!r})")
+    if not real and kind == "f":
+        raise ValueError(
+            f"method={method!r} transforms complex input (got dtype="
+            f"{dtype!r}); use an 'rfft-*' method for real signals")
+    if real and mesh is not None and base == "fpm-pad":
+        raise ValueError(
+            "the distributed real path runs the homogeneous unpadded "
+            "program; use method='rfft-lb' with mesh=, or plan "
+            "'rfft-fpm-pad' single-host")
     if mesh is not None:
         mesh_p = int(mesh.shape[axis_name])
         if p is None:
@@ -300,14 +423,15 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
         if n % p:
             raise ValueError(f"N={n} must be divisible by mesh axis "
                              f"{axis_name}={p}")
-        if method == "fpm":
+        if base == "fpm":
             raise ValueError(
                 "plan_pfft(mesh=...) shards rows evenly, so plain "
-                "method='fpm' would run byte-identically to method='lb' "
-                "(its FPMs can only influence the *row* split, which SPMD "
-                "fixes) — use method='lb', or 'fpm-pad'/'fpm-czt' for "
-                "FPM-driven per-device pads and execution variants")
-        if method != "lb" and fpms is not None and fpms.p != p:
+                f"method={method!r} would run byte-identically to the 'lb' "
+                "variant (its FPMs can only influence the *row* split, "
+                "which SPMD fixes) — use the 'lb' variant, or "
+                "'fpm-pad'/'fpm-czt' for FPM-driven per-device pads and "
+                "execution variants")
+        if base != "lb" and fpms is not None and fpms.p != p:
             raise ValueError(
                 f"plan_pfft(mesh=...) assigns one abstract processor per "
                 f"device: fpms covers {fpms.p} processors but the mesh "
@@ -328,9 +452,9 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
             fused=bool(fused) and pad_strategy == "none",
             pad=pad_strategy)
 
-    if method == "lb":
+    if base == "lb":
         if p is None:
-            raise ValueError("method='lb' requires p")
+            raise ValueError(f"method={method!r} requires p")
         part = lb_partition(n, p)
         pads = None
     else:
@@ -343,10 +467,17 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
             part = lb_partition(n, p)
         else:
             part = partition_rows(n, fpms, eps)
-        if method == "fpm-pad":
+        if base == "fpm-pad" and real:
+            # Even pads only: the packed real row FFT transforms two rows
+            # per complex FFT, and the half-spectrum crop identity holds
+            # for any length >= n, so the model picks among even
+            # beneficial lengths.
+            from repro.plan.pads import rfft_pad_lengths
+            pads = rfft_pad_lengths(fpms, part.d, n)
+        elif base == "fpm-pad":
             from repro.plan.pads import fpm_pad_lengths
             pads = fpm_pad_lengths(fpms, part.d, n)
-        elif method == "fpm-czt":
+        elif base == "fpm-czt":
             from repro.plan.pads import czt_fft_lengths
             pads = czt_fft_lengths(fpms, part.d, n, limit_ratio=2.0)
         else:
@@ -355,21 +486,32 @@ def plan_pfft(n: int, *, p: int | None = None, fpms: FPMSet | None = None,
     schedule, tuning = _resolve_schedule(n, method, part, pads, fpms, tune,
                                          wisdom, config, dtype,
                                          mesh=mesh, axis_name=axis_name)
-    d = part.d
-
-    if mesh is not None:
-        from repro.core.pfft_dist import pfft2_distributed
-
-        def raw(m):
-            # The full schedule, not just its anchor config: this is what
-            # routes heterogeneous picks to the device-group program (and
-            # per-device FPM pad lengths to the uniform-length rule).
-            return pfft2_distributed(m, mesh, axis_name, schedule=schedule)
-    else:
-        def raw(m):
-            return _pfft_limb(m, d, schedule=schedule)
-
+    raw = _build_raw(n, method, part.d, schedule, mesh, axis_name, dtype)
     return PfftPlan(n=n, method=method, partition=part, pad_lengths=pads,
                     config=schedule.anchor_config, schedule=schedule,
                     tuning=tuning, _fn=jax.jit(raw), mesh=mesh,
-                    axis_name=axis_name)
+                    axis_name=axis_name, dtype=dtype)
+
+
+def rfft2(m: jnp.ndarray, *, p: int = 1, tune: TuneMode = "off",
+          wisdom: str | None = None, mesh=None,
+          axis_name: str = "fft") -> jnp.ndarray:
+    """One-shot planned real-input 2-D DFT -> (N, N//2+1) half spectrum.
+
+    Convenience wrapper: builds an ``rfft-lb`` plan for ``m``'s size and
+    dtype and executes it once.  For the plan-once/run-many lifecycle
+    (or the FPM methods) use ``plan_pfft(method='rfft-...')`` directly.
+    """
+    if m.ndim < 2 or m.shape[-1] != m.shape[-2]:
+        raise ValueError(f"rfft2 plans square (N, N) signals, got {m.shape}")
+    plan = plan_pfft(m.shape[-1], p=p, method="rfft-lb", tune=tune,
+                     wisdom=wisdom, dtype=str(jnp.asarray(m).dtype),
+                     mesh=mesh, axis_name=axis_name)
+    return plan.execute(m)
+
+
+def irfft2(h: jnp.ndarray, *, n: int | None = None) -> jnp.ndarray:
+    """Inverse of ``rfft2``: half spectrum back to the real signal
+    (``repro.fft.irfft2``; pass ``n`` for odd original lengths)."""
+    from repro.fft.fft2d import irfft2 as _irfft2
+    return _irfft2(h, n=n)

@@ -53,13 +53,14 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.padding import pad_to_smooth
 from repro.core.pfft import czt_dft
-from repro.fft.fft2d import fft_rows, fft_rows_then_transpose
+from repro.fft.fft2d import fft_rows, fft_rows_then_transpose, rfft_rows
 from repro.plan.config import PlanConfig
 from repro.plan.groups import (DeviceGroupProgram, device_group_program,
                                spmd_program_config)
 from repro.plan.schedule import SegmentSchedule
 
-__all__ = ["pfft2_distributed", "make_pfft2_fn", "ragged_row_layout",
+__all__ = ["pfft2_distributed", "rpfft2_distributed", "irpfft2_distributed",
+           "make_pfft2_fn", "ragged_row_layout",
            "validate_spmd_schedule", "default_dist_pad_len"]
 
 # Inverse of PlanConfig.dist_padded: the ``padded`` vocabulary of this
@@ -504,6 +505,166 @@ def pfft2_distributed(
         return phase(phase(block))
 
     return _run(m)
+
+
+# ---------------------------------------------------------------------------
+# Real-input distributed pipeline: the all_to_all moves only half-spectrum
+# panels — ~half the bytes per phase of the complex path.
+# ---------------------------------------------------------------------------
+
+def _validate_real_dist(config: PlanConfig | None,
+                        schedule: SegmentSchedule | None) -> PlanConfig:
+    """The real distributed path's program config, validated.
+
+    The half-spectrum exchange reshapes both collectives, so the path
+    supports the homogeneous, unfused, monolithic program shape (the one
+    the real tuner races); panel pipelining / fused exchange / per-shard
+    branching stay complex-path features for now and are refused eagerly
+    with the schedule's own description.
+    """
+    if schedule is not None:
+        if config is not None:
+            raise ValueError("pass either schedule= or config=, not both")
+        config = validate_spmd_schedule(schedule)
+        if schedule.common_config is None:
+            raise ValueError(
+                "rpfft2_distributed runs homogeneous schedules only; "
+                f"got {schedule.describe()}")
+    if config is None:
+        config = PlanConfig(real=True)
+    if not config.real:
+        raise ValueError(
+            f"rpfft2_distributed needs a real config, got {config.describe()}")
+    if config.fused or config.pipeline_panels > 1:
+        raise ValueError(
+            "the real distributed path is unfused and monolithic "
+            f"(fused/panels are complex-path features), got {config.describe()}")
+    return config
+
+
+def rpfft2_distributed(
+    m: jnp.ndarray,
+    mesh: Mesh,
+    axis_name: str = "fft",
+    *,
+    config: PlanConfig | None = None,
+    schedule: SegmentSchedule | None = None,
+    pad_len: int | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Distributed real-input 2-D DFT -> the (N, N//2+1) half spectrum.
+
+    ``m`` is a real square matrix sharded by rows over ``axis_name``.
+    Phase 1 rffts each device's rows (two real rows per complex FFT) and
+    exchanges only the ``halfspec_cols(n, p)`` surviving spectral columns
+    — the panel crossing the interconnect is ~half the complex path's
+    bytes; phase 2 runs complex FFTs over the sharded spectral rows and
+    exchanges the same half-width panel back.  ``config.pad='fpm'`` pads
+    the local FFT length to ``pad_len`` with the padded-signal crop
+    semantics, exactly like ``pfft2_distributed``; a homogeneous
+    ``schedule`` is validated through ``validate_spmd_schedule`` and its
+    max entry length becomes ``pad_len``.
+    """
+    from repro.plan.cost import halfspec_cols  # lazy: plan imports core
+
+    config = _validate_real_dist(config, schedule)
+    if schedule is not None and pad_len is None:
+        pad_len = max(e.length for e in schedule)
+    padded = config.dist_padded
+    n = m.shape[0]
+    if m.ndim != 2 or m.shape[1] != n:
+        raise ValueError("PFFT operates on square N x N signal matrices")
+    if not jnp.issubdtype(m.dtype, jnp.floating):
+        raise ValueError(
+            f"the real pipeline takes a real-valued matrix, got {m.dtype}")
+    p = int(mesh.shape[axis_name])
+    if n % p:
+        raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    if pad_len is None:
+        pad_len = default_dist_pad_len(n, padded)
+    nh = n // 2 + 1
+    hc = halfspec_cols(n, p)
+    kw = config.row_fft_kwargs(backend)
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                            split_axis=1, concat_axis=0, tiled=True)
+
+    def local_rfft(block: jnp.ndarray) -> jnp.ndarray:
+        if padded == "crop" and pad_len > n:
+            block = jnp.pad(block, ((0, 0), (0, pad_len - n)))
+            return rfft_rows(block, **kw)[:, :nh]
+        return rfft_rows(block, **kw)
+
+    def local_fft(block: jnp.ndarray) -> jnp.ndarray:
+        if padded == "crop" and pad_len > n:
+            block = jnp.pad(block, ((0, 0), (0, pad_len - n)))
+            return fft_rows(block, **kw)[:, :n]
+        return fft_rows(block, **kw)
+
+    spec_rows = P(axis_name, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,
+        check_rep=False,
+    )
+    def _run(block):
+        # Phase 1: local rffts, pad the half spectrum to the p-divisible
+        # panel width, exchange + transpose -> spectral rows sharded.
+        h = local_rfft(block)                       # (n/p, nh)
+        h = jnp.pad(h, ((0, 0), (0, hc - nh)))      # (n/p, hc)
+        h = a2a(h).T                                # (hc/p, n)
+        # Phase 2: complex FFTs down the (original) columns, exchange the
+        # half-width panel back -> row-sharded (n/p, hc).
+        f = local_fft(h)                            # (hc/p, n)
+        return a2a(f).T                             # (n/p, hc)
+
+    return _run(m)[:, :nh]
+
+
+def irpfft2_distributed(
+    h: jnp.ndarray,
+    mesh: Mesh,
+    axis_name: str = "fft",
+    *,
+    n: int | None = None,
+) -> jnp.ndarray:
+    """Distributed inverse of ``rpfft2_distributed``.
+
+    ``h`` is the (N, N//2+1) half spectrum sharded by rows; the result is
+    the real (N, N) signal matrix, same sharding.  ``n`` is the original
+    last-axis length (default assumes it was even).  Both collectives
+    move the same half-width panel as the forward transform.
+    """
+    from repro.plan.cost import halfspec_cols  # lazy: plan imports core
+
+    nh = h.shape[-1]
+    if n is None:
+        n = 2 * (nh - 1)
+    if h.ndim != 2 or h.shape[0] != n:
+        raise ValueError(
+            f"expected the ({n}, {nh}) half spectrum, got {h.shape}")
+    p = int(mesh.shape[axis_name])
+    if n % p:
+        raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    hc = halfspec_cols(n, p)
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                            split_axis=1, concat_axis=0, tiled=True)
+
+    spec_rows = P(axis_name, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,
+        check_rep=False,
+    )
+    def _run(block):
+        # Inverse column FFTs first (on the transposed, sharded spectral
+        # rows), then the real inverse along rows.
+        g = jnp.pad(block, ((0, 0), (0, hc - nh)))  # (n/p, hc)
+        g = a2a(g).T                                # (hc/p, n)
+        g = jnp.fft.ifft(g, axis=-1)
+        g = a2a(g).T[:, :nh]                        # (n/p, nh)
+        return jnp.fft.irfft(g, n=n, axis=-1)       # (n/p, n) real
+
+    return _run(h)
 
 
 def make_pfft2_fn(mesh: Mesh, n: int, axis_name: str = "fft", **kw):

@@ -19,33 +19,37 @@ from repro.plan.config import PlanConfig, normalize_pad
 from repro.plan.schedule import SegmentPlan, SegmentSchedule
 from repro.plan.groups import (DeviceGroupProgram, device_group_program,
                                spmd_program_config)
-from repro.plan.pads import czt_fft_lengths, fpm_pad_lengths
+from repro.plan.pads import (czt_fft_lengths, fpm_pad_lengths,
+                             rfft_pad_lengths)
 from repro.plan.cost import (CostParams, dist_comm_bytes, estimate_cost,
                              estimate_grouped_cost, estimate_schedule_cost,
-                             phase_dispatch_count)
+                             halfspec_cols, phase_dispatch_count)
 from repro.plan.wisdom import (WISDOM_VERSION, load_wisdom, lookup_wisdom,
                                partition_digest, record_wisdom,
                                topology_digest, wisdom_key)
 from repro.plan.tune import (candidate_configs, dist_panel_space,
                              grouped_dist_schedule, measure_configs,
-                             measure_dist_configs,
+                             measure_dist_configs, measure_rfft_configs,
+                             measure_rfft_dist_configs,
                              segment_candidate_configs, tune_config,
                              tune_dist_config, tune_dist_schedule,
-                             tune_schedule)
+                             tune_rfft, tune_rfft_dist, tune_schedule)
 from repro.plan.calibrate import fit_cost_params
 
 __all__ = [
     "PlanConfig", "normalize_pad",
     "SegmentPlan", "SegmentSchedule",
     "DeviceGroupProgram", "device_group_program", "spmd_program_config",
-    "czt_fft_lengths", "fpm_pad_lengths",
+    "czt_fft_lengths", "fpm_pad_lengths", "rfft_pad_lengths",
     "CostParams", "dist_comm_bytes", "estimate_cost",
     "estimate_grouped_cost", "estimate_schedule_cost",
-    "phase_dispatch_count",
+    "halfspec_cols", "phase_dispatch_count",
     "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "partition_digest",
     "record_wisdom", "topology_digest", "wisdom_key",
     "candidate_configs", "dist_panel_space", "grouped_dist_schedule",
-    "measure_configs", "measure_dist_configs", "segment_candidate_configs",
-    "tune_config", "tune_dist_config", "tune_dist_schedule", "tune_schedule",
+    "measure_configs", "measure_dist_configs", "measure_rfft_configs",
+    "measure_rfft_dist_configs", "segment_candidate_configs",
+    "tune_config", "tune_dist_config", "tune_dist_schedule",
+    "tune_rfft", "tune_rfft_dist", "tune_schedule",
     "fit_cost_params",
 ]

@@ -17,6 +17,11 @@ hashable value the planner can enumerate, price, measure, and persist:
   ``"czt"`` (exact Bluestein at a model-chosen length).
 * ``pipeline_panels`` software-pipelines the distributed all_to_all
   against per-panel FFTs (``pfft2_distributed``).
+* ``real`` runs the real-input half-spectrum pipeline: the row phase is
+  an rfft (two real rows packed per complex FFT), the column phase works
+  on ``N//2+1`` spectral columns, and the distributed transpose moves
+  ~half the bytes.  Incompatible with ``pad="czt"`` — Bluestein has no
+  half-spectrum form here.
 
 The dataclass is frozen so configs can key dicts and be deduplicated; the
 dict round-trip (``to_dict``/``from_dict``) is the wisdom wire format.
@@ -42,6 +47,7 @@ class PlanConfig:
     batched: bool = True
     pad: str = "none"
     pipeline_panels: int = 1
+    real: bool = False
 
     def __post_init__(self) -> None:
         if self.radix not in _VALID_RADIX:
@@ -52,6 +58,9 @@ class PlanConfig:
             raise ValueError(f"pipeline_panels must be >= 1, got {self.pipeline_panels}")
         if self.fused and self.pad != "none":
             raise ValueError("fused phases have no per-segment padding; pad must be 'none'")
+        if self.real and self.pad == "czt":
+            raise ValueError("the real half-spectrum pipeline has no Bluestein "
+                             "form; real configs cannot use pad='czt'")
 
     # ---- derived views -------------------------------------------------
 
@@ -114,6 +123,8 @@ class PlanConfig:
             parts.append(f"pad={self.pad}")
         if self.pipeline_panels > 1:
             parts.append(f"panels={self.pipeline_panels}")
+        if self.real:
+            parts.append("real")
         return ",".join(parts)
 
 

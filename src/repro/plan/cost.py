@@ -36,12 +36,17 @@ from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["CostParams", "dist_comm_bytes", "estimate_cost",
            "estimate_grouped_cost", "estimate_schedule_cost",
-           "phase_dispatch_count"]
+           "halfspec_cols", "phase_dispatch_count"]
 
 _COMPLEX64_BYTES = 8
 # Bluestein computes one N-point DFT as ~3 length-m FFTs (forward, kernel
 # forward is precomputable but the conv needs fwd+inv) + pointwise chirps.
 _CZT_FFT_FACTOR = 3.0
+# Real rows pack pairwise into one complex FFT, so the row phase does
+# ~half the complex-path flops; the column phase still runs full-length
+# FFTs but over ~half the columns.  Pack/unpack lane work eats part of
+# the ideal 0.5, hence 0.55.
+_REAL_COMPUTE_FACTOR = 0.55
 
 
 def _is_pow2(n: int) -> bool:
@@ -97,17 +102,34 @@ class CostParams:
         )
 
 
-def dist_comm_bytes(n: int, p: int, *, itemsize: int = _COMPLEX64_BYTES
-                    ) -> float:
+def halfspec_cols(n: int, p: int = 1) -> int:
+    """Spectral columns the real half-spectrum pipeline carries.
+
+    ``N//2+1`` Hermitian-unique bins, rounded up to a multiple of ``p``
+    when distributed so the all_to_all splits evenly across devices
+    (``rpfft2_distributed`` pads the panel to this width and crops after).
+    """
+    nh = n // 2 + 1
+    if p <= 1:
+        return nh
+    return -(-nh // p) * p
+
+
+def dist_comm_bytes(n: int, p: int, *, itemsize: int = _COMPLEX64_BYTES,
+                    real: bool = False) -> float:
     """Cross-device bytes of one phase's ``all_to_all`` over ``p`` devices.
 
     Each device holds an (N/p, N) block and keeps its own diagonal tile,
     so (p-1)/p of the matrix crosses the interconnect per phase (0 on a
     1-device mesh — the degenerate exchange is a local reshuffle).
+    ``real=True`` prices the half-spectrum panel: ``halfspec_cols(n, p)``
+    columns instead of ``n`` — the ~2x comm saving the rfft2 pipeline is
+    for.
     """
     if p <= 1:
         return 0.0
-    return float(n) * float(n) * itemsize * (p - 1) / p
+    cols = halfspec_cols(n, p) if real else n
+    return float(n) * float(cols) * itemsize * (p - 1) / p
 
 
 def _segment_work(n: int, d, pad_lengths) -> list[tuple[int, int]]:
@@ -222,14 +244,24 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
             t = fpms[e.index].time_at(e.rows, e.length)
         else:
             t = float(fft_flops(e.rows, e.length)) / params.nominal_flops
-        return t * _compute_multiplier(e.config, e.length, params)
+        t *= _compute_multiplier(e.config, e.length, params)
+        if e.config.real:
+            # Two real rows ride one complex FFT in phase 1 and phase 2
+            # only touches the half spectrum; see _REAL_COMPUTE_FACTOR.
+            t *= _REAL_COMPUTE_FACTOR
+        return t
 
     makespan = max((seg_time(e) for e in schedule.entries), default=0.0)
 
     common = schedule.common_config
     fused = common is not None and common.fused
+    all_real = all(e.config.real for e in schedule.entries) \
+        and bool(schedule.entries)
     traffic = 0.0 if fused else (
         2.0 * n * n * _COMPLEX64_BYTES / params.hbm_bytes_per_s)
+    if all_real:
+        # The intermediate matrix is the (n, n//2+1) half spectrum.
+        traffic *= halfspec_cols(n) / n
     dispatches = 1 if fused else max(len(schedule.batch_groups()), 1)
     phase = makespan + traffic + dispatches * params.dispatch_overhead_s
 

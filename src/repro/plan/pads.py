@@ -10,6 +10,9 @@ both decisions:
   ``N_padded_i`` (pad-and-crop semantics).
 * ``czt_fft_lengths`` — beyond-paper: the FPM-chosen smooth FFT length
   ``m_i >= 2N-1`` for the exact Bluestein transform of each segment.
+* ``rfft_pad_lengths`` — the real-pipeline variant of ``fpm_pad_lengths``
+  restricted to *even* padded lengths (the pack-two-rows rfft needs an
+  even transform length to keep its half-spectrum crop well defined).
 """
 
 from __future__ import annotations
@@ -19,7 +22,7 @@ import numpy as np
 from repro.core.fpm import FPMSet
 from repro.core.padding import determine_pad_length, smooth_candidates
 
-__all__ = ["fpm_pad_lengths", "czt_fft_lengths"]
+__all__ = ["fpm_pad_lengths", "czt_fft_lengths", "rfft_pad_lengths"]
 
 
 def fpm_pad_lengths(fpms: FPMSet, d: np.ndarray, n: int) -> np.ndarray:
@@ -49,5 +52,34 @@ def czt_fft_lengths(fpms: FPMSet, d: np.ndarray, n: int, *,
             return int(cands[0])
         times = [fpms[i].time_at(d_i, int(c)) for c in cands]
         return int(cands[int(np.argmin(times))])
+
+    return np.array([best_len(i) for i in range(fpms.p)], dtype=np.int64)
+
+
+def rfft_pad_lengths(fpms: FPMSet, d: np.ndarray, n: int) -> np.ndarray:
+    """Per-processor padded row lengths for the real FPM-PAD variant.
+
+    Same argmin as ``determine_pad_length`` but only over *even*
+    candidate lengths: the rfft half spectrum of an odd-length row has a
+    different bin layout, and cropping it back to the first ``n//2+1``
+    bins of the length-``n`` transform only matches for even pads.  In
+    practice the FPM grid columns are lane-aligned smooth sizes (all
+    even), so the restriction rarely binds; ``n`` (no pad) is the
+    fallback exactly as in the complex path.
+    """
+    d = np.asarray(d)
+
+    def best_len(i: int) -> int:
+        fpm = fpms[i]
+        d_i = int(d[i])
+        best_y, best_t = n, fpm.time_at(d_i, n)
+        for y in np.asarray(fpm.ys):
+            y = int(y)
+            if y <= n or y % 2:
+                continue
+            t = fpm.time_at(d_i, y)
+            if t < best_t:
+                best_y, best_t = y, t
+        return best_y
 
     return np.array([best_len(i) for i in range(fpms.p)], dtype=np.int64)

@@ -34,7 +34,9 @@ from repro.plan.schedule import SegmentSchedule
 __all__ = ["candidate_configs", "segment_candidate_configs",
            "measure_configs", "measure_dist_configs", "tune_config",
            "tune_schedule", "tune_dist_config", "tune_dist_schedule",
-           "grouped_dist_schedule", "dist_panel_space"]
+           "grouped_dist_schedule", "dist_panel_space",
+           "measure_rfft_configs", "measure_rfft_dist_configs",
+           "tune_rfft", "tune_rfft_dist"]
 
 
 def _is_pow2(n: int) -> bool:
@@ -197,9 +199,9 @@ def _behavior_key(cfg: PlanConfig, n: int, d, pad_lengths) -> tuple:
     """
     lengths = sorted({length for _, length in _segment_work(n, d, pad_lengths)})
     if cfg.fused:
-        return ("fused", tuple(lengths))
+        return ("fused", cfg.real, tuple(lengths))
     per_len = [(length,) + _length_backend(cfg, length) for length in lengths]
-    return (cfg.batched, cfg.pipeline_panels, tuple(per_len))
+    return (cfg.batched, cfg.pipeline_panels, cfg.real, tuple(per_len))
 
 
 def tune_config(n: int, *, d=None, pad_lengths=None, fpms: FPMSet | None = None,
@@ -641,6 +643,323 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
     info["dist"]["comm_time_meas_s"] = float(
         max(measured[winner] - 2.0 * local_s, 0.0))
     return winner, info
+
+
+# ------------------------------------------------------------------- real
+
+def _require_real_dtype(dtype) -> np.dtype:
+    """Validate a real-pipeline input dtype; returns the np.dtype."""
+    dt = np.dtype(dtype)
+    if dt not in (np.dtype(np.float32), np.dtype(np.float64)):
+        raise ValueError(
+            f"the real pipeline tunes float32/float64 inputs, got {dt.name}")
+    return dt
+
+
+def _real_candidates(cands: Sequence[PlanConfig]) -> list[PlanConfig]:
+    """The real-flagged twins of a complex candidate list (czt dropped —
+    the real pipeline has no Bluestein form)."""
+    import dataclasses
+    return [dataclasses.replace(c, real=True) for c in cands
+            if c.pad != "czt"]
+
+
+def _family_finalists(ranked, n: int, d, pad_lengths, top_k: int
+                      ) -> list[PlanConfig]:
+    """Distinct-program finalists that always include the best candidate
+    of *each* family (real and complex), so measure mode genuinely races
+    real-vs-complex rather than burning every slot on one side."""
+    finalists, seen = [], set()
+    for cfg, _ in ranked:
+        key = _behavior_key(cfg, n, d, pad_lengths)
+        if key not in seen:
+            seen.add(key)
+            finalists.append(cfg)
+        if len(finalists) >= max(top_k, 1):
+            break
+    for want_real in (True, False):
+        if not any(c.real == want_real for c in finalists):
+            best = next((c for c, _ in ranked if c.real == want_real), None)
+            if best is not None:
+                finalists.append(best)
+    return finalists
+
+
+def measure_rfft_configs(configs: Sequence[PlanConfig], n: int, *, d=None,
+                         pad_lengths=None, dtype=np.float32, rounds: int = 3
+                         ) -> dict[PlanConfig, float]:
+    """On-device seconds of the half-spectrum limb per config.
+
+    ``real`` configs run ``_rpfft_limb`` on the real input; complex
+    fallback configs run ``_pfft_limb`` on the upcast input and crop to
+    the half spectrum — the *same* (N, N//2+1) deliverable with the same
+    partition and pad lengths, so the race is apples-to-apples (the
+    padded real phase equals the padded complex phase's half spectrum
+    bin for bin — see ``core.pfft.halfspec_distribution``).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pfft import _pfft_limb, _rpfft_limb  # lazy
+
+    dt = _require_real_dtype(dtype)
+    ctype = np.complex64 if dt == np.dtype(np.float32) else np.complex128
+    nh = n // 2 + 1
+    d_eff = np.asarray(d) if d is not None else np.array([n], dtype=np.int64)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, n)).astype(dt))
+    pairs = []
+    for cfg in configs:
+        if cfg.real:
+            fn = jax.jit(lambda m, c=cfg: _rpfft_limb(
+                m, d_eff, pad_lengths=pad_lengths, config=c))
+        else:
+            fn = jax.jit(lambda m, c=cfg: _pfft_limb(
+                m.astype(ctype), d_eff, pad_lengths=pad_lengths,
+                config=c)[:, :nh])
+        jax.block_until_ready(fn(x))  # compile
+        pairs.append((cfg, fn))
+    return _timed_min(pairs, x, rounds)
+
+
+def tune_rfft(n: int, *, d=None, pad_lengths=None, fpms: FPMSet | None = None,
+              mode: str = "estimate", pad: str = "none",
+              params: CostParams | None = None, top_k: int = 3,
+              dtype=np.float32, reps: int = 3
+              ) -> tuple[SegmentSchedule, dict]:
+    """Tune a real-input half-spectrum problem; returns (schedule, info).
+
+    The candidate pot holds *both families*: real-flagged configs (the
+    rfft pipeline) and their complex twins (upcast + crop fallback), so
+    the planner picks real-vs-complex per (n, dtype) on the cost model —
+    or, in measure mode, on an on-device race whose finalists always
+    include the best of each family.  ``info["chosen_path"]`` says which
+    side won; the returned schedule's configs carry the ``real`` flag the
+    executor routes on.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    _require_real_dtype(dtype)
+    if pad == "czt":
+        raise ValueError("the real pipeline has no Bluestein form")
+    if d is not None:
+        d = np.asarray(d)
+    if params is None:
+        params = CostParams.for_backend()
+
+    complex_cands = candidate_configs(n, pad=pad, d=d)
+    cands = _real_candidates(complex_cands) + complex_cands
+    ranked = sorted(
+        ((cfg, estimate_cost(cfg, n=n, d=d, pad_lengths=pad_lengths,
+                             fpms=fpms, params=params))
+         for cfg in cands),
+        key=lambda kv: kv[1])
+    info: dict = {
+        "mode": mode,
+        "ranked": [(cfg.to_dict(), float(c)) for cfg, c in ranked],
+    }
+
+    if mode == "estimate":
+        winner = ranked[0][0]
+    else:
+        finalists = _family_finalists(ranked, n, d, pad_lengths, top_k)
+        measured = measure_rfft_configs(finalists, n, d=d,
+                                        pad_lengths=pad_lengths, dtype=dtype,
+                                        rounds=reps)
+        winner = min(measured, key=measured.get)
+        info["measured"] = [(cfg.to_dict(), float(t))
+                            for cfg, t in measured.items()]
+        info["time_s"] = float(measured[winner])
+    info["chosen_path"] = "real" if winner.real else "complex"
+    schedule = SegmentSchedule.homogeneous(winner, n, d, pad_lengths)
+    info["schedule"] = schedule.to_dict()
+    return schedule, info
+
+
+def measure_rfft_dist_configs(configs: Sequence[PlanConfig], n: int, mesh,
+                              axis_name: str = "fft", *,
+                              pad_len: int | None = None, dtype=np.float32,
+                              rounds: int = 3) -> dict[PlanConfig, float]:
+    """End-to-end on-device seconds of the distributed half-spectrum
+    transform per config: ``real`` configs run ``rpfft2_distributed``
+    (half-width all_to_all panels), complex fallbacks run the upcast
+    ``pfft2_distributed`` cropped to the half spectrum — same deliverable
+    on the same mesh, same sharded-input discipline as
+    ``measure_dist_configs``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.pfft_dist import (pfft2_distributed,  # lazy
+                                      rpfft2_distributed)
+
+    dt = _require_real_dtype(dtype)
+    ctype = np.complex64 if dt == np.dtype(np.float32) else np.complex128
+    nh = n // 2 + 1
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, n)).astype(dt))
+    x = jax.device_put(x, NamedSharding(mesh, P(axis_name, None)))
+    pairs = []
+    for cfg in configs:
+        if cfg.real:
+            fn = jax.jit(functools.partial(rpfft2_distributed, mesh=mesh,
+                                           axis_name=axis_name, config=cfg,
+                                           pad_len=pad_len))
+        else:
+            fn = jax.jit(lambda m, c=cfg: pfft2_distributed(
+                m.astype(ctype), mesh=mesh, axis_name=axis_name, config=c,
+                pad_len=pad_len)[:, :nh])
+        jax.block_until_ready(fn(x))  # compile
+        pairs.append((cfg, fn))
+    return _timed_min(pairs, x, rounds)
+
+
+def _measure_local_real_phases(cfg: PlanConfig, n: int, p: int, pad_len: int,
+                               dtype, rounds: int) -> float:
+    """Combined seconds of the real pipeline's two *local* phase programs
+    (rfft on the (N/p, N) row block + complex FFT on the (hc/p, N)
+    spectral block) — the subtraction term that turns an end-to-end real
+    measurement into a comm sample, mirroring ``_measure_local_phase``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pfft import _group_row_rffts, _group_row_ffts  # lazy
+    from repro.plan.cost import halfspec_cols
+
+    dt = _require_real_dtype(dtype)
+    ctype = np.complex64 if dt == np.dtype(np.float32) else np.complex128
+    hc = halfspec_cols(n, p)
+    rng = np.random.default_rng(0)
+    x1 = jnp.asarray(rng.standard_normal((max(n // p, 1), n)).astype(dt))
+    x2 = jnp.asarray((rng.standard_normal((max(hc // p, 1), n))
+                      + 1j * rng.standard_normal((max(hc // p, 1), n))
+                      ).astype(ctype))
+    length = pad_len if cfg.pad == "fpm" else n
+    fn1 = jax.jit(lambda b: _group_row_rffts(b, length, n, cfg, None))
+    fn2 = jax.jit(lambda b: _group_row_ffts(b, length, n, cfg, None))
+    jax.block_until_ready(fn1(x1))  # compile
+    jax.block_until_ready(fn2(x2))
+    t1 = min(_timed_min([(cfg, fn1)], x1, rounds).values())
+    t2 = min(_timed_min([(cfg, fn2)], x2, rounds).values())
+    return t1 + t2
+
+
+def tune_rfft_dist(n: int, mesh, axis_name: str = "fft", *,
+                   mode: str = "estimate", pad: str = "none",
+                   pad_len: int | None = None, fpms: FPMSet | None = None,
+                   params: CostParams | None = None, top_k: int = 3,
+                   panels: Sequence[int] | None = None, dtype=np.float32,
+                   reps: int = 3, measure_retries: int = 0
+                   ) -> tuple[SegmentSchedule, dict]:
+    """Tune the distributed real-input transform on ``mesh``.
+
+    Real candidates are priced with the *half-spectrum* comm term
+    (``dist_comm_bytes(real=True)`` — ~half the complex bytes) and their
+    complex twins with the full-panel term, so estimate mode already sees
+    the comm saving; measure mode races both families end to end through
+    their actual distributed programs.  The real path's program shape is
+    homogeneous/unfused/monolithic (``rpfft2_distributed``), so real
+    candidates enumerate only the row-FFT backend; complex fallbacks keep
+    the full panel/fused space.  ``info["dist"]`` carries both byte
+    counts, their ratio, and (measured) the winner's comm sample.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    _require_real_dtype(dtype)
+    if pad == "czt":
+        raise ValueError("the real pipeline has no Bluestein form")
+    p = int(mesh.shape[axis_name])
+    if n % p:
+        raise ValueError(f"N={n} must be divisible by mesh axis "
+                         f"{axis_name}={p}")
+    if panels is None:
+        panels = dist_panel_space(n, p)
+    if params is None:
+        params = CostParams.for_backend()
+    comm_complex = dist_comm_bytes(n, p)
+    comm_real = dist_comm_bytes(n, p, real=True)
+
+    complex_cands = [c for c in candidate_configs(n, pad=pad, d=None,
+                                                  panels=panels) if c.batched]
+    real_cands = [c for c in _real_candidates(complex_cands)
+                  if not c.fused and c.pipeline_panels == 1]
+    ranked = sorted(
+        ((cfg, estimate_cost(cfg, n=n, fpms=fpms, params=params,
+                             comm_bytes=comm_real if cfg.real
+                             else comm_complex))
+         for cfg in real_cands + complex_cands),
+        key=lambda kv: kv[1])
+    info: dict = {
+        "mode": mode,
+        "ranked": [(cfg.to_dict(), float(c)) for cfg, c in ranked],
+        "dist": {
+            "devices": p,
+            "axis_name": axis_name,
+            "comm_bytes_complex": float(comm_complex),
+            "comm_bytes_real": float(comm_real),
+            "comm_ratio_real": (float(comm_real / comm_complex)
+                                if comm_complex else 0.0),
+        },
+    }
+
+    def finish(winner: PlanConfig) -> tuple[SegmentSchedule, dict]:
+        info["chosen_path"] = "real" if winner.real else "complex"
+        info["dist"]["comm_bytes"] = float(comm_real if winner.real
+                                           else comm_complex)
+        d = np.full(p, n // p, dtype=np.int64) if p > 0 else None
+        schedule = SegmentSchedule.homogeneous(winner, n, d)
+        info["schedule"] = schedule.to_dict()
+        return schedule, info
+
+    if mode == "estimate":
+        return finish(ranked[0][0])
+    if p <= 1:
+        info["measure_fallback"] = "1-device mesh: measure == estimate"
+        return finish(ranked[0][0])
+
+    finalists = _family_finalists(ranked, n, None, None, top_k)
+    try:
+        measured = _measure_with_retry(
+            lambda: measure_rfft_dist_configs(finalists, n, mesh, axis_name,
+                                              pad_len=pad_len, dtype=dtype,
+                                              rounds=reps),
+            measure_retries)
+    except Exception as err:
+        if measure_retries <= 0:
+            raise
+        info["measure_fallback"] = (
+            f"measurement failed after {measure_retries} retries: {err!r}")
+        return finish(ranked[0][0])
+    winner = min(measured, key=measured.get)
+    info["measured"] = [(cfg.to_dict(), float(t))
+                        for cfg, t in measured.items()]
+    info["time_s"] = float(measured[winner])
+
+    eff_len = pad_len
+    if eff_len is None:
+        from repro.core.pfft_dist import default_dist_pad_len
+        eff_len = default_dist_pad_len(n, winner.dist_padded)
+    try:
+        if winner.real:
+            local_s = _measure_with_retry(
+                lambda: _measure_local_real_phases(winner, n, p, eff_len,
+                                                   dtype, reps),
+                measure_retries)
+        else:
+            ctype = (np.complex64 if np.dtype(dtype) == np.dtype(np.float32)
+                     else np.complex128)
+            local_s = 2.0 * _measure_with_retry(
+                lambda: _measure_local_phase(winner, n, p, eff_len, ctype,
+                                             reps),
+                measure_retries)
+    except Exception as err:
+        if measure_retries <= 0:
+            raise
+        info["dist"]["comm_sample_error"] = repr(err)
+        return finish(winner)
+    info["dist"]["local_phase_s"] = float(local_s)
+    info["dist"]["comm_time_meas_s"] = float(
+        max(measured[winner] - local_s, 0.0))
+    return finish(winner)
 
 
 def grouped_dist_schedule(n: int, p: int, *, pad_lengths=None,

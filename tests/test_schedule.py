@@ -555,8 +555,13 @@ def test_fused_equals_unfused_on_two_device_mesh(dist_subprocess):
 # dict round-trips that back the wisdom wire format must be identity.
 
 _KEY_NS = (16, 32, 48)
-_KEY_DTYPES = ("complex64", "complex128")
-_KEY_METHODS = ("lb", "fpm", "fpm-pad", "fpm-czt")
+# The real pipeline plans float inputs and its method names carry the
+# "rfft-" prefix — both dimensions must stay injective alongside the
+# complex vocabulary (a real plan served to a complex problem, or one
+# precision's plan served to another, would execute the wrong transform).
+_KEY_DTYPES = ("complex64", "complex128", "float32", "float64")
+_KEY_METHODS = ("lb", "fpm", "fpm-pad", "fpm-czt",
+                "rfft-lb", "rfft-fpm", "rfft-fpm-pad")
 _KEY_BACKENDS = ("cpu", "tpu")
 _KEY_DETAILS = (None, "cafe0123", "70a61b03")
 _KEY_TOPOS = (None, "2xfft.cpu.k1", "4xfft.cpu.k1-2-4", "4xrows.cpu.k1")
@@ -569,11 +574,11 @@ def _key_tuple_from_draws(n_i, dtype_i, p, method_i, backend_i, detail_i,
             _KEY_TOPOS[topo_i])
 
 
-@given(a_n=st.integers(0, 2), a_dtype=st.integers(0, 1), a_p=st.integers(1, 8),
-       a_method=st.integers(0, 3), a_backend=st.integers(0, 1),
+@given(a_n=st.integers(0, 2), a_dtype=st.integers(0, 3), a_p=st.integers(1, 8),
+       a_method=st.integers(0, 6), a_backend=st.integers(0, 1),
        a_detail=st.integers(0, 2), a_topo=st.integers(0, 3),
-       b_n=st.integers(0, 2), b_dtype=st.integers(0, 1), b_p=st.integers(1, 8),
-       b_method=st.integers(0, 3), b_backend=st.integers(0, 1),
+       b_n=st.integers(0, 2), b_dtype=st.integers(0, 3), b_p=st.integers(1, 8),
+       b_method=st.integers(0, 6), b_backend=st.integers(0, 1),
        b_detail=st.integers(0, 2), b_topo=st.integers(0, 3))
 @settings(max_examples=150, deadline=None)
 def test_wisdom_keys_never_collide(a_n, a_dtype, a_p, a_method, a_backend,
@@ -594,20 +599,24 @@ def test_wisdom_keys_never_collide(a_n, a_dtype, a_p, a_method, a_backend,
 @given(radix_i=st.integers(0, 2), fused=st.sampled_from((False, True)),
        batched=st.sampled_from((False, True)),
        pad=st.sampled_from(("none", "fpm", "czt")),
-       panels=st.integers(1, 8))
+       panels=st.integers(1, 8), real=st.sampled_from((False, True)))
 def test_plan_config_roundtrip_is_identity(radix_i, fused, batched, pad,
-                                           panels):
+                                           panels, real):
     if fused:
         pad = "none"  # the one structural constraint on valid configs
+    if real and pad == "czt":
+        pad = "fpm"  # the real pipeline has no Bluestein form
     cfg = PlanConfig(radix=(None, 2, 4)[radix_i], fused=fused,
-                     batched=batched, pad=pad, pipeline_panels=panels)
+                     batched=batched, pad=pad, pipeline_panels=panels,
+                     real=real)
     assert PlanConfig.from_dict(cfg.to_dict()) == cfg
 
 
 _CFG_POOL = (PlanConfig(), PlanConfig(radix=2), PlanConfig(radix=4),
              PlanConfig(batched=False), PlanConfig(pad="fpm"),
              PlanConfig(pad="czt"), PlanConfig(radix=4, fused=True),
-             PlanConfig(pipeline_panels=4))
+             PlanConfig(pipeline_panels=4), PlanConfig(real=True),
+             PlanConfig(radix=2, real=True, pad="fpm"))
 
 
 @settings(max_examples=100, deadline=None)
