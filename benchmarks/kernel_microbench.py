@@ -48,10 +48,12 @@ acceptance checks assert on):
                pipelines and carries the measured comm sample.
 
 Every record is labeled with the backend it was measured on and whether
-the Pallas kernels ran in interpret mode, and an existing output file
-holding accelerator-tagged records is never overwritten by interpreter
-timings (``--force`` overrides — interpreter numbers say nothing about
-hardware and must not masquerade as it).
+the Pallas kernels ran in interpret mode.  A ``--sweeps`` subset merges:
+records of benches not being rerun are carried into the new file intact,
+and a cpu (interpret-mode) run refuses to replace accelerator-tagged
+records of the benches it *is* rerunning (``--force`` overrides —
+interpreter numbers say nothing about hardware and must not masquerade
+as it).
 
 ``--wisdom W`` writes each benched size's best *measured* config into the
 wisdom store ``W`` (keyed exactly as ``plan_pfft`` keys its lookups), so a
@@ -497,26 +499,58 @@ def bench_rfft(sizes, wisdom_path: str | None = None) -> list[dict]:
     return recs
 
 
-def _refuse_accelerator_overwrite(out: str, backend: str,
-                                  force: bool) -> None:
-    """Interpreter timings must never silently replace hardware numbers.
+# Which record ``bench`` tags each sweep (re)writes — the unit of the
+# overwrite guard and of partial-sweep merging below.
+_SWEEP_BENCHES = {
+    "radix": ("radix",), "fused": ("fused",), "segments": ("segments",),
+    "planner": ("planner",), "schedule": ("schedule",),
+    "dist": ("dist",), "hetero-dist": ("hetero-dist",),
+    "rfft": ("rfft", "rfft-dist"),
+}
 
-    If ``out`` already holds records tagged with a non-cpu backend and
-    this run is on cpu (interpret-mode Pallas), refuse to overwrite it —
-    the stored numbers are the valuable ones.  ``--force`` overrides.
+
+def _merge_existing_records(out: str, rerun_benches: set, backend: str,
+                            force: bool) -> list:
+    """Record-level overwrite protection + partial-sweep merge.
+
+    Returns the existing records whose bench is *not* being rerun (they
+    are carried into the new file unchanged, so a ``--sweeps`` subset
+    refreshes only its own rows).  For the benches that *are* rerun: if
+    this run is cpu (interpret-mode Pallas) and any record it would
+    replace is tagged with an accelerator backend, refuse — interpreter
+    timings say nothing about hardware and must never silently replace
+    measured numbers.  ``--force`` overrides.  Records predating the
+    per-record tags inherit the file's top-level backend.
     """
-    if force or backend != "cpu" or not os.path.exists(out):
-        return
+    if not os.path.exists(out):
+        return []
     try:
         with open(out) as f:
             existing = json.load(f)
     except (OSError, ValueError):
-        return  # unreadable/legacy file: nothing trustworthy to protect
-    prev = existing.get("backend") if isinstance(existing, dict) else None
-    if prev and prev != "cpu":
-        raise SystemExit(
-            f"{out} holds {prev}-measured records; refusing to overwrite "
-            f"them with cpu interpret-mode timings (--force to override)")
+        return []  # unreadable/legacy file: nothing trustworthy to protect
+    if not isinstance(existing, dict):
+        return []
+    file_backend = existing.get("backend")
+    records = [r for r in existing.get("records", []) if isinstance(r, dict)]
+    replaced = [r for r in records if r.get("bench") in rerun_benches]
+    if backend == "cpu" and not force:
+        accel = sorted({r.get("backend") or file_backend or "?"
+                        for r in replaced
+                        if (r.get("backend") or file_backend or "cpu")
+                        != "cpu"})
+        if accel:
+            raise SystemExit(
+                f"{out} holds {'/'.join(accel)}-measured records for "
+                f"benches being rerun; refusing to replace them with cpu "
+                f"interpret-mode timings (--force to override)")
+    kept = [r for r in records if r.get("bench") not in rerun_benches]
+    for r in kept:
+        # Tags travel with the record once it outlives its original file
+        # header (the merged file's header describes *this* run).
+        r.setdefault("backend", file_backend)
+        r.setdefault("interpret", bool(existing.get("interpret_mode")))
+    return kept
 
 
 def run(quick: bool = False, out: str = DEFAULT_OUT,
@@ -550,7 +584,8 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
     import jax
     backend = jax.default_backend()
     interpret = backend == "cpu"
-    _refuse_accelerator_overwrite(out, backend, force)
+    rerun_benches = {b for s in chosen for b in _SWEEP_BENCHES[s]}
+    kept = _merge_existing_records(out, rerun_benches, backend, force)
     records = []
     for name in chosen:
         records += all_sweeps[name]()
@@ -562,7 +597,7 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
     payload = {
         "backend": backend,
         "interpret_mode": interpret,
-        "records": records,
+        "records": kept + records,
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)

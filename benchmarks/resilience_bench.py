@@ -68,15 +68,23 @@ def _engineered_rig(n: int = 48):
     return fpms, params
 
 
-def _mean_plan_step(plan, x, reps: int) -> float:
+def _step_stats(plan, x, reps: int) -> dict:
+    """{"mean", "p50", "p90", "p99"} step seconds — percentiles via the
+    shared ``benchmarks.stats.percentiles`` (same tail definition as
+    the serving bench)."""
     import jax
+    from benchmarks.stats import percentiles
     jax.block_until_ready(plan.execute(x))   # compile outside the timing
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(plan.execute(x))
         ts.append(time.perf_counter() - t0)
-    return float(np.mean(ts))
+    return {"mean": float(np.mean(ts)), **percentiles(ts)}
+
+
+def _mean_plan_step(plan, x, reps: int) -> float:
+    return _step_stats(plan, x, reps)["mean"]
 
 
 def bench_straggler(quick: bool = False) -> list[dict]:
@@ -107,9 +115,10 @@ def bench_straggler(quick: bool = False) -> list[dict]:
                            drift_threshold=1.3, cooldown=2)
         pre_sched = rp.schedule.describe()
         rp.execute(x)
-        baseline_s = _mean_plan_step(rp.plan, x, reps)
+        baseline = _step_stats(rp.plan, x, reps)
+        baseline_s = baseline["mean"]
 
-        inject_wall = time.time()
+        inject_wall = time.perf_counter()
         inject_call = rp.calls
         inj.slow_group(0, 3)
         swap = None
@@ -125,6 +134,8 @@ def bench_straggler(quick: bool = False) -> list[dict]:
             "bench": "straggler", "n": n, "devices": p,
             "slow_device": 0, "slow_factor": 3,
             "baseline_step_s": baseline_s,
+            "baseline_step_p50_s": baseline["p50"],
+            "baseline_step_p99_s": baseline["p99"],
             "pre_schedule": pre_sched,
             "recovered": swap is not None,
             "events": rp.events,
@@ -132,7 +143,8 @@ def bench_straggler(quick: bool = False) -> list[dict]:
         if swap is None:
             return [rec]
 
-        post_s = _mean_plan_step(rp.plan, x, reps)
+        post = _step_stats(rp.plan, x, reps)
+        post_s = post["mean"]
         degraded = rp.last_degraded_fpms
         t0 = time.perf_counter()
         oracle_sched, _ = tune_dist_schedule(
@@ -150,6 +162,8 @@ def bench_straggler(quick: bool = False) -> list[dict]:
             "relative_speeds_at_detect": swap["relative_speeds"],
             "post_schedule": rp.schedule.describe(),
             "post_step_s": post_s,
+            "post_step_p50_s": post["p50"],
+            "post_step_p99_s": post["p99"],
             "oracle_schedule": oracle_sched.describe(),
             "oracle_step_s": oracle_s,
             "oracle_tune_s": oracle_tune_s,

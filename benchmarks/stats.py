@@ -14,7 +14,21 @@ try:
 except Exception:  # pragma: no cover
     _sstats = None
 
-__all__ = ["mean_using_ttest"]
+__all__ = ["mean_using_ttest", "percentiles"]
+
+
+def percentiles(samples, qs=(50, 90, 99)) -> dict:
+    """Tail-latency summary: {"p50": ..., "p90": ..., "p99": ...}.
+
+    The shared helper behind the serving and resilience benchmarks —
+    one definition of "p99" (linear interpolation over the sample) so
+    their numbers compare.  Empty input yields NaNs rather than raising
+    so a smoke run with a shed-everything policy still writes a record.
+    """
+    arr = np.asarray(list(samples), dtype=float)
+    if arr.size == 0:
+        return {f"p{int(q)}": float("nan") for q in qs}
+    return {f"p{int(q)}": float(np.percentile(arr, q)) for q in qs}
 
 
 def mean_using_ttest(app: Callable[[], None], *, min_reps: int = 3,

@@ -178,6 +178,46 @@ class PfftPlan:
             self._batched_fns[m.ndim] = fn
         return fn(m)
 
+    def execute_many(self, ms, *, pad_to: int | None = None) -> list:
+        """Serve a cohort: stack same-size signals into ONE batched dispatch.
+
+        The serving layer's execution surface — ``ms`` is a sequence of
+        ``(n, n)`` signals (many users' concurrent requests for the same
+        transform), stacked onto a leading batch axis and run through
+        ``execute``'s vmapped program, so the whole cohort costs one
+        dispatch instead of ``len(ms)``.  Returns the per-request
+        results in order.
+
+        ``pad_to`` rounds the stacked batch up with zero signals before
+        dispatch (the extras are computed and dropped): a serving loop
+        that buckets its batch sizes to powers of two compiles one
+        program per (plan, bucket) instead of one per distinct cohort
+        size — jit specialises on shapes, and an unbucketed mixed
+        stream would otherwise retrace on nearly every tick.
+
+        Stacking, padding, and unstacking happen on the host (numpy),
+        so the device sees exactly one transfer in and one out; the
+        returned results are numpy views into the fetched batch.
+        Per-item device slicing would cost a dispatch per request —
+        the very overhead coalescing exists to amortise.
+        """
+        if not ms:
+            return []
+        arrs = [np.asarray(m) for m in ms]
+        for m in arrs:
+            if m.shape != (self.n, self.n):
+                raise ValueError(
+                    f"execute_many stacks ({self.n}, {self.n}) signals, "
+                    f"got {m.shape}")
+        batch = np.stack(arrs)
+        b = len(arrs)
+        if pad_to is not None and pad_to > b:
+            batch = np.concatenate(
+                [batch, np.zeros((pad_to - b,) + batch.shape[1:],
+                                 batch.dtype)])
+        out = np.asarray(self.execute(batch))
+        return [out[i] for i in range(b)]
+
     @property
     def d(self) -> np.ndarray:
         return self.partition.d

@@ -269,13 +269,13 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              out_dir: str = DEFAULT_OUT, tag: str = "baseline",
              analysis: bool = False, opts: dict | None = None) -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     parts, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
                              analysis=analysis, opts=opts)
     meta["opts"] = opts or {}
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     cost_sum: dict[str, float] = {}
     coll_sum: dict[str, int] = {}
     mems = []
@@ -291,7 +291,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         for k, v in collective_bytes(compiled.as_text()).items():
             coll_sum[k] = coll_sum.get(k, 0) + int(weight * v)
         mems.append((name, compiled.memory_analysis()))
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     terms = roofline_terms(cost_sum, "", meta["chips"], meta["model_flops"])
     terms.coll_bytes = coll_sum

@@ -40,14 +40,14 @@ def serve_batch(arch: str, *, smoke: bool = True, batch: int = 8,
         donate_argnums=(1,))
 
     cache = model.init_cache(cfg, batch, max_len)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill_fn(params, prompts, cache)
     logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     key = jax.random.PRNGKey(seed + 1)
     toks = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     for i in range(gen):
         toks.append(tok)
@@ -58,7 +58,7 @@ def serve_batch(arch: str, *, smoke: bool = True, batch: int = 8,
         else:
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
     jax.block_until_ready(toks[-1])
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
 
     out = np.stack([np.asarray(t) for t in toks], axis=1)  # (B, gen)
     stats = {

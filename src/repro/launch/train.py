@@ -71,10 +71,10 @@ def run_training(arch: str, *, smoke: bool = True, steps: int = 20,
     with mesh:
         for step in range(start_step, steps):
             batch_data = pipe.next()
-            t0 = time.time()
+            t0 = time.perf_counter()
             state, metrics = step_fn(state, batch_data)
             loss = float(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             monitor.record(0, dt)
             losses.append(loss)
             if step % log_every == 0:

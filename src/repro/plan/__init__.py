@@ -10,12 +10,15 @@ single-SPMD device-group programs for the distributed pipeline,
 finalists; ``tune_schedule`` prices per distinct effective FFT length,
 ``tune_dist_schedule`` races grouped finalists end to end on a mesh),
 ``wisdom`` persists the choice per (n, dtype, p, method, backend),
-``calibrate`` fits the cost constants back from measured wisdom, and
-``pads`` holds the shared FPM pad/CZT-length selection.  The user entry
-point is ``repro.core.api.plan_pfft(tune=..., wisdom=...)``.
+``cache`` keeps built plans hot in a bounded LRU fronting the wisdom
+store (the serving layer's in-memory tier), ``calibrate`` fits the cost
+constants back from measured wisdom, and ``pads`` holds the shared FPM
+pad/CZT-length selection.  The user entry point is
+``repro.core.api.plan_pfft(tune=..., wisdom=...)``.
 """
 
 from repro.plan.config import PlanConfig, normalize_pad
+from repro.plan.cache import CacheStats, PlanCache
 from repro.plan.schedule import SegmentPlan, SegmentSchedule
 from repro.plan.groups import (DeviceGroupProgram, device_group_program,
                                spmd_program_config)
@@ -38,6 +41,7 @@ from repro.plan.calibrate import fit_cost_params
 
 __all__ = [
     "PlanConfig", "normalize_pad",
+    "CacheStats", "PlanCache",
     "SegmentPlan", "SegmentSchedule",
     "DeviceGroupProgram", "device_group_program", "spmd_program_config",
     "czt_fft_lengths", "fpm_pad_lengths", "rfft_pad_lengths",

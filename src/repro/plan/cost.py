@@ -199,13 +199,14 @@ def _compute_multiplier(config: PlanConfig, length: int,
 def estimate_cost(config: PlanConfig, *, n: int, d=None, pad_lengths=None,
                   fpms: FPMSet | None = None,
                   params: CostParams | None = None,
-                  comm_bytes: float = 0.0) -> float:
+                  comm_bytes: float = 0.0, batch: int = 1) -> float:
     """Predicted seconds for a full 2-D PFFT (two limb phases) under ``config``.
 
     ``d``/``pad_lengths`` describe the partition (None: single whole-matrix
     segment); ``fpms`` supplies measured per-processor times when available;
     ``comm_bytes`` is the per-phase all_to_all volume of the distributed
-    pipeline (0 single-host).
+    pipeline (0 single-host); ``batch`` prices a cohort of stacked
+    signals riding one vmapped dispatch (see ``estimate_schedule_cost``).
 
     Delegates to ``estimate_schedule_cost`` of the degenerate
     every-segment-alike schedule — one copy of the phase formula, so the
@@ -214,13 +215,13 @@ def estimate_cost(config: PlanConfig, *, n: int, d=None, pad_lengths=None,
     schedule = SegmentSchedule.homogeneous(
         config, n, d, pad_lengths if d is not None else None)
     return estimate_schedule_cost(schedule, fpms=fpms, params=params,
-                                  comm_bytes=comm_bytes)
+                                  comm_bytes=comm_bytes, batch=batch)
 
 
 def estimate_schedule_cost(schedule: SegmentSchedule, *,
                            fpms: FPMSet | None = None,
                            params: CostParams | None = None,
-                           comm_bytes: float = 0.0) -> float:
+                           comm_bytes: float = 0.0, batch: int = 1) -> float:
     """Predicted seconds for a full 2-D PFFT under a (possibly
     heterogeneous) schedule: two limb phases, each costing
 
@@ -234,10 +235,20 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
     intermediate matrix; ``pipeline_panels=k`` overlaps the comm term at
     (k-1) extra dispatches.  ``estimate_cost`` is the degenerate
     homogeneous view of this same formula.
+
+    ``batch`` prices a *cohort*: ``batch`` same-(n, dtype, method)
+    signals stacked on a leading axis and run through one vmapped
+    dispatch (``PfftPlan.execute``'s batch dims).  Compute, HBM traffic,
+    and comm volume scale with the batch while the per-dispatch
+    overheads and the per-phase collective launch latency are paid once
+    — the amortisation the serving layer's coalescing tick is priced by
+    (predicted cohort cost is affine in the batch, so the tick assembler
+    can solve for the largest admissible batch in closed form).
     """
     if params is None:
         params = CostParams.for_backend()
     n = schedule.n
+    batch = max(int(batch), 1)
 
     def seg_time(e) -> float:
         if fpms is not None:
@@ -251,14 +262,15 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
             t *= _REAL_COMPUTE_FACTOR
         return t
 
-    makespan = max((seg_time(e) for e in schedule.entries), default=0.0)
+    makespan = batch * max((seg_time(e) for e in schedule.entries),
+                           default=0.0)
 
     common = schedule.common_config
     fused = common is not None and common.fused
     all_real = all(e.config.real for e in schedule.entries) \
         and bool(schedule.entries)
     traffic = 0.0 if fused else (
-        2.0 * n * n * _COMPLEX64_BYTES / params.hbm_bytes_per_s)
+        2.0 * batch * n * n * _COMPLEX64_BYTES / params.hbm_bytes_per_s)
     if all_real:
         # The intermediate matrix is the (n, n//2+1) half spectrum.
         traffic *= halfspec_cols(n) / n
@@ -271,7 +283,7 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
         # The all_to_all crosses the interconnect, not HBM; the fixed
         # collective-launch latency is paid once per phase (panels reuse
         # the issued collective stream).
-        comm = comm_bytes / params.interconnect_bytes_per_s \
+        comm = batch * comm_bytes / params.interconnect_bytes_per_s \
             + params.comm_latency_s
     if k > 1:
         comm *= 1.0 - params.panel_overlap * (k - 1) / k
@@ -283,7 +295,7 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
 def estimate_grouped_cost(schedule: SegmentSchedule, *,
                           fpms: FPMSet | None = None,
                           params: CostParams | None = None,
-                          comm_bytes: float = 0.0) -> float:
+                          comm_bytes: float = 0.0, batch: int = 1) -> float:
     """Predicted seconds for a schedule lowered as a *device-group program*
     (``repro.plan.groups``): the per-group makespan of
     ``estimate_schedule_cost`` plus the switch-dispatch overhead.
@@ -300,7 +312,7 @@ def estimate_grouped_cost(schedule: SegmentSchedule, *,
     if params is None:
         params = CostParams.for_backend()
     base = estimate_schedule_cost(schedule, fpms=fpms, params=params,
-                                  comm_bytes=comm_bytes)
+                                  comm_bytes=comm_bytes, batch=batch)
     branches = len(schedule.configs)
     if branches > 1:
         base += 2.0 * (branches - 1) * params.dispatch_overhead_s

@@ -62,7 +62,9 @@ class FaultInjector:
         self._fail_at: dict[int, BaseException] = {}  # call index -> exc
 
     def _record(self, kind: str, **fields) -> None:
-        self.log.append({"kind": kind, "wall": time.time(), **fields})
+        # "wall" stamps are monotonic (perf_counter), only ever *subtracted*
+        # against other stamps — never interpreted as an absolute epoch.
+        self.log.append({"kind": kind, "wall": time.perf_counter(), **fields})
 
     # ---- per-device slowdown ----
 

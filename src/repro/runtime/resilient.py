@@ -173,7 +173,7 @@ class ResilientPlan:
             for ev in reversed(self.events):   # stamp the swap boundary
                 if ev.get("kind") == "replan" and ev.get("swap_call") is None:
                     ev["swap_call"] = self._calls
-                    ev["swap_wall"] = time.time()
+                    ev["swap_wall"] = time.perf_counter()
                     break
         if inj.epoch != self._epoch_seen:
             # The fault layer changed under an already-traced program:
@@ -328,7 +328,7 @@ class ResilientPlan:
         return key, topo
 
     def _replan(self, call: int, slow: list[int]) -> None:
-        detect_wall = time.time()
+        detect_wall = time.perf_counter()
         rel = self.monitor.relative_speeds()
         degraded = self.monitor.degraded_fpms(self._baseline_fpms())
         self.last_degraded_fpms = degraded
@@ -380,7 +380,7 @@ class ResilientPlan:
                 except (TimeoutError, OSError) as err:
                     # An advisory store must never stall recovery.
                     self.events.append({"kind": "wisdom_error",
-                                        "call": call, "wall": time.time(),
+                                        "call": call, "wall": time.perf_counter(),
                                         "error": repr(err)})
 
         replan_s = time.perf_counter() - t0
@@ -444,7 +444,7 @@ class ResilientPlan:
         if self._state is not None:
             self._state = reshard(self._state, self.mesh, self._state_specs)
         self.events.append({
-            "kind": "device_loss", "call": call, "wall": time.time(),
+            "kind": "device_loss", "call": call, "wall": time.perf_counter(),
             "lost": lost, "survivors": len(survivors),
             "devices": rebuilt.used, "dropped": rebuilt.dropped,
             "topology": self.plan.tuning.get("topology"),

@@ -1,0 +1,431 @@
+"""Transform-serving layer: plan cache, coalescing tick loop, priced
+admission, and wisdom-store contention under concurrent serve ticks.
+
+The serving acceptance story in one file: correctness of every cohort
+member against numpy, one dispatch per coalesced cohort, deterministic
+budget splits from the cost model's own numbers, priced rejections, and
+the zero-retune audit (warm plan cache in-process, warm wisdom store
+across services).
+"""
+
+import asyncio
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import plan_pfft
+from repro.launch.serve_fft import (AdmissionError, CohortKey,
+                                    DeadlineExceeded, FFTService)
+from repro.plan.cache import PlanCache
+from repro.plan.config import PlanConfig
+from repro.plan.wisdom import load_wisdom, record_wisdom
+
+
+def _signal(rng, n, dtype="complex64"):
+    if dtype.startswith("float"):
+        return rng.standard_normal((n, n)).astype(dtype)
+    return (rng.standard_normal((n, n))
+            + 1j * rng.standard_normal((n, n))).astype(dtype)
+
+
+class _FakePlan:
+    def __init__(self, source="wisdom"):
+        self.tuning = {"source": source}
+
+
+# ---------------------------------------------------------------- PlanCache
+
+class TestPlanCache:
+    def test_lru_bound_and_eviction_counters(self):
+        cache = PlanCache(maxsize=2)
+        for k in "abc":
+            cache.get(k, _FakePlan)
+        assert len(cache) == 2
+        assert cache.stats.evictions == 1
+        assert cache.stats.misses == 3
+        assert "a" not in cache and "b" in cache and "c" in cache
+
+    def test_hit_refreshes_recency(self):
+        cache = PlanCache(maxsize=2)
+        cache.get("a", _FakePlan)
+        cache.get("b", _FakePlan)
+        cache.get("a", _FakePlan)          # refresh a
+        cache.get("c", _FakePlan)          # evicts b, not a
+        assert "a" in cache and "b" not in cache
+        assert cache.stats.hits == 1
+
+    def test_retune_counter_tracks_tuned_sources_only(self):
+        cache = PlanCache()
+        cache.get("w", lambda: _FakePlan("wisdom"))
+        cache.get("e", lambda: _FakePlan("estimate"))
+        cache.get("m", lambda: _FakePlan("measure"))
+        cache.get("x", lambda: _FakePlan("explicit"))
+        assert cache.stats.retunes == 2
+        cache.get("e", lambda: _FakePlan("estimate"))   # hit: no retune
+        assert cache.stats.retunes == 2
+
+    def test_peek_mutates_nothing(self):
+        cache = PlanCache(maxsize=2)
+        cache.get("a", _FakePlan)
+        assert cache.peek("a") is not None
+        assert cache.peek("zzz") is None
+        assert cache.stats.hits == 0 and cache.stats.misses == 1
+
+    def test_reset_stats_keeps_entries(self):
+        cache = PlanCache()
+        cache.get("a", _FakePlan)
+        cache.reset_stats()
+        assert cache.stats_dict()["misses"] == 0
+        assert "a" in cache
+        _, hit = cache.get("a", _FakePlan)
+        assert hit
+
+    def test_build_failure_not_cached(self):
+        cache = PlanCache()
+        with pytest.raises(RuntimeError):
+            cache.get("a", lambda: (_ for _ in ()).throw(RuntimeError("x")))
+        assert "a" not in cache
+        cache.get("a", _FakePlan)   # succeeds after the failed build
+
+
+# ------------------------------------------------------------- execute_many
+
+class TestExecuteMany:
+    def test_matches_per_item_execute(self, rng):
+        plan = plan_pfft(16, p=1, method="lb", dtype="complex64")
+        ms = [_signal(rng, 16) for _ in range(5)]
+        outs = plan.execute_many(ms)
+        assert len(outs) == 5
+        for m, out in zip(ms, outs):
+            np.testing.assert_allclose(np.asarray(out), np.fft.fft2(m),
+                                       atol=1e-2)
+
+    def test_pad_to_is_invisible_in_results(self, rng):
+        plan = plan_pfft(16, p=1, method="lb", dtype="complex64")
+        ms = [_signal(rng, 16) for _ in range(3)]
+        plain = plan.execute_many(ms)
+        padded = plan.execute_many(ms, pad_to=8)
+        for a, b in zip(plain, padded):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+    def test_shape_validation(self, rng):
+        plan = plan_pfft(16, p=1, method="lb", dtype="complex64")
+        with pytest.raises(ValueError, match="stacks"):
+            plan.execute_many([_signal(rng, 8)])
+        assert plan.execute_many([]) == []
+
+
+# ------------------------------------------------------- service end to end
+
+class TestServiceCorrectness:
+    def test_mixed_cohorts_match_numpy(self, rng, tmp_path):
+        svc = FFTService(wisdom=str(tmp_path / "w.json"), tune="estimate")
+        cases = []
+        for n in (16, 32):
+            for method in ("lb", "rfft-lb"):
+                dtype = "float32" if method.startswith("rfft") else "complex64"
+                for _ in range(3):
+                    m = _signal(rng, n, dtype)
+                    cases.append((m, method, svc.enqueue(m, method=method)))
+        assert svc.drain() == len(cases)
+        for m, method, ticket in cases:
+            ref = (np.fft.rfft2(m) if method.startswith("rfft")
+                   else np.fft.fft2(m))
+            np.testing.assert_allclose(np.asarray(ticket.result()), ref,
+                                       atol=1e-2)
+            assert ticket.done and ticket.latency_s > 0
+
+    def test_cohort_is_one_dispatch(self, rng):
+        svc = FFTService(tune="estimate")
+        for _ in range(6):
+            svc.enqueue(_signal(rng, 16), method="lb")
+        svc.tick()
+        s = svc.stats()
+        assert s["dispatches"] == 1
+        assert s["max_coalesced"] == 6
+        assert s["coalesced_dispatches"] == 1
+        assert s["batching_efficiency"] == 6.0
+
+    def test_non_square_and_unknown_method_rejected(self, rng):
+        svc = FFTService()
+        with pytest.raises(ValueError, match="square"):
+            svc.enqueue(np.zeros((4, 8), np.complex64))
+        with pytest.raises(ValueError, match="not served"):
+            svc.enqueue(np.zeros((4, 4), np.complex64), method="fpm-czt")
+
+    def test_result_before_tick_raises(self, rng):
+        svc = FFTService()
+        t = svc.enqueue(_signal(rng, 16))
+        with pytest.raises(RuntimeError, match="tick pending"):
+            t.result()
+
+
+# ------------------------------------------------- priced admission + shed
+
+class TestAdmission:
+    def test_oversize_is_priced_rejection(self):
+        svc = FFTService(tick_budget_s=0.05)
+        big = np.zeros((2048, 2048), np.complex64)
+        with pytest.raises(AdmissionError) as ei:
+            svc.enqueue(big)
+        assert ei.value.predicted_s > ei.value.budget_s
+        assert ei.value.budget_s == pytest.approx(0.05)
+        assert svc.stats()["rejected"] == 1
+        assert svc.pending_count == 0
+
+    def test_queue_full_is_priced_rejection(self, rng):
+        svc = FFTService(max_queue=2)
+        svc.enqueue(_signal(rng, 16))
+        svc.enqueue(_signal(rng, 16))
+        with pytest.raises(AdmissionError, match="queue full") as ei:
+            svc.enqueue(_signal(rng, 16))
+        assert ei.value.predicted_s > 0
+
+    def test_deadline_shed_with_priced_error(self, rng):
+        svc = FFTService(tune="estimate")
+        doomed = svc.enqueue(_signal(rng, 16), deadline_s=1e-4)
+        kept = svc.enqueue(_signal(rng, 16))
+        time.sleep(0.002)
+        svc.drain()
+        with pytest.raises(DeadlineExceeded):
+            doomed.result()
+        assert kept.done and kept.result() is not None
+        s = svc.stats()
+        assert s["shed_deadline"] == 1 and s["served"] == 1
+
+    def test_budget_splits_cohort_deterministically(self, rng):
+        svc = FFTService(tune="estimate")
+        first = svc.enqueue(_signal(rng, 32), method="lb")
+        svc.drain()                      # builds the plan: prices settle
+        assert first.done
+        # Budget admits exactly two 32s per tick by the model's own law.
+        svc.tick_budget_s = svc.price(32, "lb", batch=2) * 1.01
+        svc.reset_stats()
+        tickets = [svc.enqueue(_signal(rng, 32), method="lb")
+                   for _ in range(6)]
+        svc.drain()
+        s = svc.stats()
+        assert s["ticks"] == 3
+        assert s["splits"] == 2          # final tick takes the remainder
+        assert s["max_coalesced"] == 2
+        assert all(t.done for t in tickets)
+
+    def test_priority_beats_fifo(self, rng):
+        svc = FFTService(tune="estimate")
+        # Warm both plans so the priority tick is pure queue mechanics.
+        svc.enqueue(_signal(rng, 16), method="lb")
+        svc.enqueue(_signal(rng, 32), method="lb")
+        svc.drain()
+        # Tiny budget: only the head cohort dispatches per tick (progress
+        # guarantee), so the tick order is the priority order.  Admission
+        # keeps its own cap — the budget squeeze is about tick assembly.
+        svc.tick_budget_s = 1e-9
+        svc.max_request_s = 1.0
+        svc.reset_stats()
+        low = svc.enqueue(_signal(rng, 16), method="lb", priority=0)
+        high = svc.enqueue(_signal(rng, 32), method="lb", priority=5)
+        svc.tick()
+        assert high.done and not low.done
+        assert svc.stats()["deferred_cohorts"] == 1
+        svc.drain()
+        assert low.done
+
+    def test_progress_guarantee_over_tiny_budget(self, rng):
+        svc = FFTService(tune="estimate", tick_budget_s=1e-12,
+                         max_request_s=1.0)
+        tickets = [svc.enqueue(_signal(rng, 16)) for _ in range(3)]
+        assert svc.drain() == 3          # never wedges
+        assert all(t.done for t in tickets)
+
+
+# ------------------------------------------------ cache hierarchy / wisdom
+
+class TestCacheHierarchy:
+    def test_plan_cache_hit_zero_retune(self, rng, tmp_path):
+        svc = FFTService(wisdom=str(tmp_path / "w.json"), tune="estimate")
+        svc.enqueue(_signal(rng, 16))
+        svc.drain()
+        assert svc.stats()["plan_cache"]["retunes"] == 1
+        svc.reset_stats()
+        svc.enqueue(_signal(rng, 16))
+        svc.drain()
+        s = svc.stats()["plan_cache"]
+        assert s["hits"] == 1 and s["misses"] == 0 and s["retunes"] == 0
+
+    def test_fresh_service_served_from_warm_wisdom(self, rng, tmp_path):
+        wis = str(tmp_path / "w.json")
+        svc1 = FFTService(wisdom=wis, tune="estimate")
+        for method in ("lb", "rfft-lb"):
+            dtype = "float32" if method.startswith("rfft") else "complex64"
+            svc1.enqueue(_signal(rng, 16, dtype), method=method)
+        svc1.drain()
+        assert svc1.stats()["sources"] == {"estimate": 2}
+
+        svc2 = FFTService(wisdom=wis, tune="estimate")
+        for method in ("lb", "rfft-lb"):
+            dtype = "float32" if method.startswith("rfft") else "complex64"
+            svc2.enqueue(_signal(rng, 16, dtype), method=method)
+        svc2.drain()
+        s = svc2.stats()
+        assert s["sources"] == {"wisdom": 2}
+        assert s["plan_cache"]["retunes"] == 0
+
+    def test_lru_eviction_in_service(self, rng):
+        svc = FFTService(tune="estimate", cache_size=1)
+        svc.enqueue(_signal(rng, 16))
+        svc.drain()
+        svc.enqueue(_signal(rng, 32))
+        svc.drain()
+        s = svc.stats()["plan_cache"]
+        assert s["evictions"] == 1 and s["size"] == 1
+
+    def test_price_uses_built_schedule_after_first_dispatch(self, rng):
+        svc = FFTService(tune="estimate")
+        before = svc.price(16, "lb")
+        svc.enqueue(_signal(rng, 16))
+        svc.drain()
+        after = svc.price(16, "lb")
+        assert before > 0 and after > 0
+        assert CohortKey(16, "lb", "complex64") in svc._cache
+
+
+# ------------------------------------- wisdom contention under concurrency
+
+class TestWisdomContention:
+    def test_threaded_writers_lose_no_entries(self, tmp_path):
+        path = str(tmp_path / "w.json")
+        errors = []
+
+        def writer(tid):
+            try:
+                for i in range(8):
+                    record_wisdom(path, f"t{tid}-k{i}", PlanConfig(),
+                                  mode="estimate", retries=3,
+                                  lock_timeout_s=30.0)
+            except Exception as e:  # pragma: no cover - failure detail
+                errors.append((tid, e))
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors
+        store = load_wisdom(path)
+        keys = [k for k in store if not k.startswith("_")]
+        assert len(keys) == 48
+
+    def test_wedged_lock_times_out(self, tmp_path):
+        fcntl = pytest.importorskip("fcntl")
+        path = str(tmp_path / "w.json")
+        record_wisdom(path, "seed", PlanConfig(), mode="estimate")
+        with open(path + ".lock", "w") as holder:
+            fcntl.flock(holder, fcntl.LOCK_EX)
+            with pytest.raises(TimeoutError, match="still held"):
+                record_wisdom(path, "blocked", PlanConfig(),
+                              mode="estimate", lock_timeout_s=0.2)
+        # lock released: the write goes through
+        record_wisdom(path, "blocked", PlanConfig(), mode="estimate")
+        assert "blocked" in load_wisdom(path)
+
+    def test_concurrent_services_share_one_store(self, rng, tmp_path):
+        """Two services' ticks race the same wisdom file: every request
+        is served, the store stays parseable, and the PR 6 retry/timeout
+        paths never deadlock the tick loop."""
+        wis = str(tmp_path / "w.json")
+        svcs = [FFTService(wisdom=wis, tune="estimate") for _ in range(2)]
+        payloads = [[_signal(rng, n) for n in (16, 32, 16)]
+                    for _ in svcs]
+        errors = []
+
+        def serve(svc, ms):
+            try:
+                for m in ms:
+                    svc.enqueue(m, method="lb")
+                svc.drain()
+            except Exception as e:  # pragma: no cover - failure detail
+                errors.append(e)
+
+        threads = [threading.Thread(target=serve, args=(s, p))
+                   for s, p in zip(svcs, payloads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors
+        assert all(s.stats()["served"] == 3 for s in svcs)
+        store = load_wisdom(wis)   # parseable, both sizes recorded
+        assert sum(1 for k in store if "n=16" in k) >= 1
+        assert sum(1 for k in store if "n=32" in k) >= 1
+
+
+# ------------------------------------------------------------ async surface
+
+class TestAsyncSurface:
+    def test_submit_and_serve_forever(self, rng):
+        m = _signal(rng, 16)
+
+        async def main():
+            svc = FFTService(tune="estimate")
+            async with svc:
+                out = await svc.submit(m, method="lb")
+            return np.asarray(out), svc.stats()
+
+        out, stats = asyncio.run(main())
+        np.testing.assert_allclose(out, np.fft.fft2(m), atol=1e-2)
+        assert stats["served"] == 1
+
+    def test_service_survives_event_loop_recycling(self, rng):
+        """Regression: the wake event must rebind per serve_forever run —
+        a service reused across asyncio.run calls (warm pass after cold
+        pass) used to deadlock on the first loop's dead Event."""
+        svc = FFTService(tune="estimate")
+        m = _signal(rng, 16)
+
+        async def one_round():
+            async with svc:
+                return await asyncio.wait_for(svc.submit(m), timeout=30)
+
+        for _ in range(2):
+            out = asyncio.run(one_round())
+            np.testing.assert_allclose(np.asarray(out), np.fft.fft2(m),
+                                       atol=1e-2)
+        assert svc.stats()["served"] == 2
+
+    def test_concurrent_submitters_coalesce(self, rng):
+        ms = [_signal(rng, 16) for _ in range(8)]
+
+        async def main():
+            svc = FFTService(tune="estimate")
+            async with svc:
+                outs = await asyncio.gather(
+                    *(svc.submit(m, method="lb") for m in ms))
+            return outs, svc.stats()
+
+        outs, stats = asyncio.run(main())
+        for m, out in zip(ms, outs):
+            np.testing.assert_allclose(np.asarray(out), np.fft.fft2(m),
+                                       atol=1e-2)
+        assert stats["coalesced_dispatches"] >= 1
+        assert stats["max_coalesced"] >= 2
+
+
+# -------------------------------------------------------- shared percentile
+
+class TestPercentiles:
+    def test_basic_ordering_and_keys(self):
+        from benchmarks.stats import percentiles
+        p = percentiles(range(1, 101))
+        assert set(p) == {"p50", "p90", "p99"}
+        assert p["p50"] <= p["p90"] <= p["p99"]
+        assert p["p50"] == pytest.approx(50.5)
+
+    def test_empty_is_nan_not_crash(self):
+        from benchmarks.stats import percentiles
+        p = percentiles([])
+        assert all(np.isnan(v) for v in p.values())
