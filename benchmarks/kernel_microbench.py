@@ -46,6 +46,16 @@ acceptance checks assert on):
                looks up).  On a multi-device host an ``rfft-dist`` record
                races both families end to end through the distributed
                pipelines and carries the measured comm sample.
+  pfft3        pencil-vs-slab 3-D decomposition on an r x c mesh over
+               every visible device: ``tune_pfft3(mode="measure")`` races
+               config x panel x *orientation* finalists through the
+               two-exchange pencil pipeline, then the winner races the
+               one-axis slab program (three exchanges) end to end on the
+               same devices — the record carries the pencil-vs-slab
+               delta and the measured comm sample, and the winner
+               (orientation included) warms the same v3 2-D-topology key
+               ``plan_pfft3(mesh=...)`` looks up.  A 1-device host
+               records the estimate-fallback facts.
 
 Every record is labeled with the backend it was measured on and whether
 the Pallas kernels ran in interpret mode.  A ``--sweeps`` subset merges:
@@ -499,13 +509,104 @@ def bench_rfft(sizes, wisdom_path: str | None = None) -> list[dict]:
     return recs
 
 
+def bench_pfft3(sizes, wisdom_path: str | None = None) -> list[dict]:
+    """Pencil-vs-slab 3-D decomposition race on this host's devices.
+
+    The mesh is the squarest r x c factorization of the visible device
+    count (rectangular when p is not a perfect square — exactly the case
+    where ``tune_pfft3``'s orientation racing matters, since swapping
+    which axis plays row changes which exchange round moves more data).
+    ``tune_pfft3(mode="measure")`` races config x panel x orientation
+    finalists through the full two-exchange pencil pipeline, then the
+    winning program races the one-axis *slab* pipeline (three exchange
+    rounds) end to end over the same devices: the record carries the
+    pencil-vs-slab delta — the decomposition's headline claim — plus the
+    measured-vs-estimated comm delta the 3-D makespan constants are
+    calibrated by.  The measured winner lands in wisdom, orientation
+    included, under the same v3 2-D-topology key ``plan_pfft3(mesh=...)``
+    looks up, so a benchmark run warms 3-D planning like every other
+    sweep warms its family.  On a 1-device host the sweep records the
+    estimate-fallback facts.
+    """
+    import functools
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.pfft3d import pfft3_slab
+    from repro.launch.mesh import make_fft_mesh, make_pfft3_mesh
+    from repro.plan import pfft3_panel_space, tune_pfft3
+
+    p = jax.device_count()
+    backend = jax.default_backend()
+    c = max(k for k in range(1, int(p ** 0.5) + 1) if p % k == 0)
+    r = p // c
+    recs = []
+    for n in sizes:
+        if n % r or n % c or n % p:
+            continue
+        mesh = make_pfft3_mesh(r, c)
+        panels = pfft3_panel_space(n, r, c)
+        topo = topology_digest(mesh, ("fft_r", "fft_c"), panels=panels)
+        cfg, waxes, info = tune_pfft3(n, mesh, mode="measure",
+                                      panels=panels)
+        stats = info["pfft3"]
+        measured = "measure_fallback" not in info
+        rec = {
+            "bench": "pfft3", "n": int(n), "devices": p,
+            "mesh": f"{r}x{c}",
+            "topology": topo,
+            "config": cfg.describe(),
+            "orientation": info.get("orientation"),
+            "comm_bytes": stats["comm_bytes"],
+            "comm_time_est_s": stats["comm_time_est_s"],
+            "measured": measured,
+        }
+        if measured:
+            # Slab baseline: same cube, same local config, one mesh axis,
+            # three exchange rounds instead of the pencil's two.
+            slab_mesh = make_fft_mesh(p)
+            rng = np.random.default_rng(0)
+            x = jnp.asarray((rng.standard_normal((n, n, n))
+                             + 1j * rng.standard_normal((n, n, n))
+                             ).astype(np.complex64))
+            x = jax.device_put(x, NamedSharding(slab_mesh,
+                                                P("fft", None, None)))
+            t_slab = time_fn(jax.jit(functools.partial(
+                pfft3_slab, mesh=slab_mesh, axis_name="fft", config=cfg)), x)
+            rec.update({
+                "time_pencil_s": float(info["time_s"]),
+                "time_slab_s": float(t_slab),
+                "pencil_vs_slab_delta_s": float(t_slab - info["time_s"]),
+                "local_pass_s": stats.get("local_pass_s"),
+                "comm_time_meas_s": stats.get("comm_time_meas_s"),
+            })
+            if stats.get("comm_time_meas_s") is not None:
+                rec["comm_delta_s"] = float(
+                    stats["comm_time_meas_s"] - stats["comm_time_est_s"])
+        else:
+            rec["fallback"] = info["measure_fallback"]
+        recs.append(rec)
+        if wisdom_path and measured:
+            key = wisdom_key(n=n, dtype="complex64", p=p, method="pfft3-lb",
+                             backend=backend, topology=topo)
+            extra = {"origin": "kernel_microbench", "topology": topo}
+            if waxes is not None:
+                extra["pfft3_orientation"] = list(waxes)
+            if stats.get("comm_time_meas_s") is not None:
+                extra["comm_bytes"] = stats["comm_bytes"]
+                extra["comm_time_s"] = stats["comm_time_meas_s"]
+            record_wisdom(wisdom_path, key, cfg, mode="measure",
+                          time_s=info.get("time_s"), extra=extra)
+    return recs
+
+
 # Which record ``bench`` tags each sweep (re)writes — the unit of the
 # overwrite guard and of partial-sweep merging below.
 _SWEEP_BENCHES = {
     "radix": ("radix",), "fused": ("fused",), "segments": ("segments",),
     "planner": ("planner",), "schedule": ("schedule",),
     "dist": ("dist",), "hetero-dist": ("hetero-dist",),
-    "rfft": ("rfft", "rfft-dist"),
+    "rfft": ("rfft", "rfft-dist"), "pfft3": ("pfft3",),
 }
 
 
@@ -574,6 +675,8 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
             [48] if quick else [48, 96], wisdom_path=wisdom),
         "rfft": lambda: bench_rfft([64] if quick else [64, 128],
                                    wisdom_path=wisdom),
+        "pfft3": lambda: bench_pfft3([8] if quick else [8, 16],
+                                     wisdom_path=wisdom),
     }
     chosen = (list(all_sweeps) if sweeps is None
               else [s.strip() for s in sweeps.split(",") if s.strip()])
@@ -619,7 +722,7 @@ def main() -> int:
     ap.add_argument("--sweeps", default=None,
                     help="comma-separated subset of "
                          "radix,fused,segments,planner,schedule,dist,"
-                         "hetero-dist,rfft (default: all)")
+                         "hetero-dist,rfft,pfft3 (default: all)")
     ap.add_argument("--force", action="store_true",
                     help="overwrite an output file holding accelerator-"
                          "tagged records with interpret-mode timings")

@@ -8,8 +8,12 @@ from repro.core.pfft import (pfft_lb, pfft_fpm, pfft_fpm_pad, pfft_fpm_czt,
                              czt_dft, segment_row_ffts, plan_segment_batches,
                              rpfft_lb, rpfft_fpm, rpfft_fpm_pad,
                              halfspec_distribution, segment_row_rffts)
-from repro.core.api import plan_pfft, PfftPlan, rfft2, irfft2
-from repro.core.pfft3d import pfft3_lb, pfft3_fpm, pfft3_fpm_pad, pfft3_distributed
+from repro.core.api import (plan_pfft, PfftPlan, rfft2, irfft2,
+                            plan_pfft3, Pfft3Plan,
+                            plan_pfft1_large, Pfft1LargePlan, pfft1_large)
+from repro.core.pfft3d import (pfft3_lb, pfft3_fpm, pfft3_fpm_pad,
+                               pfft3_distributed, pfft3_pencil, pfft3_slab)
+from repro.core.pfft_large import four_step_factors, pfft1_large_apply
 from repro.plan.config import PlanConfig
 
 __all__ = [
@@ -21,5 +25,9 @@ __all__ = [
     "rpfft_lb", "rpfft_fpm", "rpfft_fpm_pad",
     "halfspec_distribution", "segment_row_rffts",
     "plan_pfft", "PfftPlan", "rfft2", "irfft2", "PlanConfig",
+    "plan_pfft3", "Pfft3Plan",
+    "plan_pfft1_large", "Pfft1LargePlan", "pfft1_large",
     "pfft3_lb", "pfft3_fpm", "pfft3_fpm_pad", "pfft3_distributed",
+    "pfft3_pencil", "pfft3_slab",
+    "four_step_factors", "pfft1_large_apply",
 ]

@@ -32,6 +32,7 @@ re-calibrated from them (``repro.plan.calibrate``) before ranking.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Any, Callable, Literal
 
@@ -66,7 +67,9 @@ _PAD_STRATEGY = {"lb": "none", "fpm": "none", "fpm-pad": "fpm",
 # pipeline has no Bluestein form.
 _REAL_METHODS = frozenset({"rfft-lb", "rfft-fpm", "rfft-fpm-pad"})
 
-__all__ = ["PfftPlan", "plan_pfft", "rfft2", "irfft2"]
+__all__ = ["PfftPlan", "plan_pfft", "rfft2", "irfft2",
+           "Pfft3Plan", "plan_pfft3",
+           "Pfft1LargePlan", "plan_pfft1_large", "pfft1_large"]
 
 
 def _base_method(method: Method) -> str:
@@ -201,22 +204,7 @@ class PfftPlan:
         Per-item device slicing would cost a dispatch per request —
         the very overhead coalescing exists to amortise.
         """
-        if not ms:
-            return []
-        arrs = [np.asarray(m) for m in ms]
-        for m in arrs:
-            if m.shape != (self.n, self.n):
-                raise ValueError(
-                    f"execute_many stacks ({self.n}, {self.n}) signals, "
-                    f"got {m.shape}")
-        batch = np.stack(arrs)
-        b = len(arrs)
-        if pad_to is not None and pad_to > b:
-            batch = np.concatenate(
-                [batch, np.zeros((pad_to - b,) + batch.shape[1:],
-                                 batch.dtype)])
-        out = np.asarray(self.execute(batch))
-        return [out[i] for i in range(b)]
+        return _execute_many(self, ms, (self.n, self.n), pad_to)
 
     @property
     def d(self) -> np.ndarray:
@@ -555,3 +543,314 @@ def irfft2(h: jnp.ndarray, *, n: int | None = None) -> jnp.ndarray:
     (``repro.fft.irfft2``; pass ``n`` for odd original lengths)."""
     from repro.fft.fft2d import irfft2 as _irfft2
     return _irfft2(h, n=n)
+
+
+# ---------------------------------------------------------------------- 3-D
+
+def _execute_many(plan, ms, shape: tuple[int, ...],
+                  pad_to: int | None) -> list:
+    """The shared cohort-stacking core of every plan's ``execute_many``:
+    host-side stack (+ zero-pad to the bucket), one batched ``execute``,
+    host-side unstack.  See ``PfftPlan.execute_many`` for why."""
+    if not ms:
+        return []
+    arrs = [np.asarray(m) for m in ms]
+    for m in arrs:
+        if m.shape != shape:
+            raise ValueError(
+                f"execute_many stacks {shape} signals, got {m.shape}")
+    batch = np.stack(arrs)
+    b = len(arrs)
+    if pad_to is not None and pad_to > b:
+        batch = np.concatenate(
+            [batch, np.zeros((pad_to - b,) + batch.shape[1:], batch.dtype)])
+    out = np.asarray(plan.execute(batch))
+    return [out[i] for i in range(b)]
+
+
+@dataclasses.dataclass
+class Pfft3Plan:
+    """A planned 3-D transform — same plan/execute/wisdom lifecycle as
+    ``PfftPlan``, for cubic N^3 signals.
+
+    Distributed plans run the pencil pipeline (``pfft3_pencil``) on the
+    captured 2-D mesh in the *tuned orientation* (which mesh axis plays
+    row is a degree of freedom on rectangular meshes — see
+    ``tune_pfft3``); single-host plans run ``pfft3_lb``'s axis passes.
+    """
+    n: int
+    method: str
+    config: PlanConfig
+    tuning: dict[str, Any]
+    _fn: Callable[[jnp.ndarray], jnp.ndarray]
+    mesh: Any = None
+    axis_names: tuple[str, str] | None = None
+    dtype: str = "complex64"
+    _batched_fns: dict[int, Callable] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def execute(self, m: jnp.ndarray) -> jnp.ndarray:
+        """Run the planned transform; leading batch dims are vmapped
+        (single-host plans only — the pencil program is already SPMD)."""
+        if m.ndim < 3 or m.shape[-3:] != (self.n,) * 3:
+            raise ValueError(
+                f"plan is for ({self.n}, {self.n}, {self.n}) signals "
+                f"(optionally with leading batch dims), got {m.shape}")
+        if m.ndim == 3:
+            return self._fn(m)
+        if self.mesh is not None:
+            raise ValueError(
+                "distributed pfft3 plans transform one cube per call "
+                "(vmapping over shard_map is not supported); loop instead")
+        fn = self._batched_fns.get(m.ndim)
+        if fn is None:
+            fn = self._fn
+            for _ in range(m.ndim - 3):
+                fn = jax.vmap(fn)
+            fn = jax.jit(fn)
+            self._batched_fns[m.ndim] = fn
+        return fn(m)
+
+    def execute_many(self, ms, *, pad_to: int | None = None) -> list:
+        """Serve a cohort of cubes in ONE batched dispatch — the 3-D
+        sibling of ``PfftPlan.execute_many`` (same host-side stacking,
+        zero-pad bucketing, and unstacking discipline)."""
+        return _execute_many(self, ms, (self.n,) * 3, pad_to)
+
+
+def plan_pfft3(n: int, *, p: int | None = None, mesh=None,
+               axis_names: tuple[str, str] = ("fft_r", "fft_c"),
+               tune: TuneMode = "off", wisdom: str | None = None,
+               config: PlanConfig | None = None,
+               dtype: str = "complex64") -> Pfft3Plan:
+    """Plan the 3-D transform; see ``plan_pfft`` for the lifecycle.
+
+    ``mesh=`` plans the pencil-parallel pipeline over a 2-D r x c mesh
+    (both ``axis_names`` must exist on it; N must divide by both sizes):
+    the wisdom key gains the mesh's 2-D ``topology_digest`` (schema v3 —
+    '+'-joined per-axis terms, injective against 1-D and transposed
+    meshes), ``tune="measure"`` races config x panel x *orientation*
+    finalists through the full two-exchange pipeline end to end, and a
+    measured winner persists with its orientation
+    (``extra["pfft3_orientation"]``) so a second plan on the same mesh
+    is served from disk with zero re-measurement.  Without a mesh the
+    plan runs the single-host axis passes over an lb row partition of
+    ``p`` segments (default 1).
+    """
+    if tune not in ("off", "estimate", "measure"):
+        raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
+    if np.dtype(dtype).kind != "c":
+        raise ValueError(
+            f"plan_pfft3 transforms complex input, got dtype={dtype!r}")
+    from repro.core.pfft_dist import require_mesh_divisible
+    from repro.plan.tune import pfft3_panel_space, tune_pfft3
+
+    method = "pfft3-lb"
+    axes0 = tuple(axis_names)
+    if mesh is not None:
+        if len(axes0) != 2:
+            raise ValueError(
+                f"plan_pfft3(mesh=...) needs two axis names, got {axes0!r}")
+        r = int(mesh.shape[axes0[0]])
+        c = int(mesh.shape[axes0[1]])
+        require_mesh_divisible(n, r, axes0[0])
+        require_mesh_divisible(n, c, axes0[1])
+        q = r * c
+        if p is not None and p != q:
+            raise ValueError(f"p={p} conflicts with mesh {axes0[0]}x"
+                             f"{axes0[1]} = {r}x{c} = {q} devices")
+    else:
+        # Single host: lb row partitions split unevenly by design, so any
+        # 1 <= p <= n works (only the SPMD mesh path needs divisibility).
+        r = c = 1
+        q = int(p) if p is not None else 1
+        if not 1 <= q <= n:
+            raise ValueError(f"need 1 <= p <= N, got p={q} for N={n}")
+
+    tuning: dict[str, Any] = {"mode": tune}
+    axes: tuple[str, str] | None = axes0 if mesh is not None else None
+
+    def build(cfg: PlanConfig, waxes) -> Pfft3Plan:
+        if mesh is not None:
+            from repro.core.pfft3d import pfft3_pencil
+            raw = functools.partial(pfft3_pencil, mesh=mesh,
+                                    axis_names=waxes, config=cfg)
+        else:
+            from repro.core.pfft3d import pfft3_lb
+            raw = functools.partial(pfft3_lb, p=q, config=cfg)
+        return Pfft3Plan(n=n, method=method, config=cfg, tuning=tuning,
+                         _fn=jax.jit(raw), mesh=mesh, axis_names=waxes,
+                         dtype=dtype)
+
+    if config is not None:
+        tuning["source"] = "explicit"
+        return build(normalize_pad(config, "none"), axes)
+
+    panels = pfft3_panel_space(n, r, c) if mesh is not None else (1,)
+    topo = None
+    if mesh is not None:
+        topo = topology_digest(mesh, axes0, panels=panels)
+        tuning["topology"] = topo
+    key = wisdom_key(n=n, dtype=dtype, p=q, method=method,
+                     backend=jax.default_backend(), topology=topo)
+    tuning["wisdom_key"] = key
+    if wisdom is not None:
+        hit = lookup_wisdom(wisdom, key)
+        if hit is not None:
+            plan, entry = hit
+            ok = isinstance(plan, PlanConfig)  # pencil plans are configs
+            waxes = axes
+            if ok and mesh is not None:
+                stored = entry.get("pfft3_orientation")
+                if stored is not None:
+                    waxes = tuple(stored)
+                    # Drifted orientation names are a miss, not an error.
+                    ok = sorted(waxes) == sorted(axes0)
+            if ok:
+                tuning["source"] = "wisdom"
+                tuning["wisdom_entry"] = entry
+                return build(normalize_pad(plan, "none"), waxes)
+
+    if tune == "off":
+        tuning["source"] = "off"
+        return build(PlanConfig(), axes)
+
+    cfg, waxes, info = tune_pfft3(
+        n, mesh, axes0 if mesh is not None else ("fft_r", "fft_c"),
+        mode=tune, panels=panels if mesh is not None else None,
+        dtype=np.dtype(dtype))
+    tuning.update(info)
+    tuning["source"] = tune
+    if wisdom is not None and tune == "measure":
+        extra: dict[str, Any] = {}
+        if topo is not None:
+            extra["topology"] = topo
+        if waxes is not None:
+            extra["pfft3_orientation"] = list(waxes)
+        stats = info.get("pfft3", {})
+        if stats.get("comm_time_meas_s") is not None:
+            extra["comm_bytes"] = stats["comm_bytes"]
+            extra["comm_time_s"] = stats["comm_time_meas_s"]
+        record_wisdom(wisdom, key, cfg, mode="measure",
+                      time_s=info.get("time_s"), extra=extra or None)
+    return build(cfg, waxes if mesh is not None else None)
+
+
+# ------------------------------------------------------------------ huge 1-D
+
+@dataclasses.dataclass
+class Pfft1LargePlan:
+    """A planned four-step huge-1-D transform (``core.pfft_large``)."""
+    n: int
+    n1: int
+    n2: int
+    method: str
+    config: PlanConfig
+    tuning: dict[str, Any]
+    _fn: Callable[[jnp.ndarray], jnp.ndarray]
+    dtype: str = "complex64"
+    _batched_fns: dict[int, Callable] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def execute(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Run the planned transform; leading batch dims are vmapped."""
+        if x.ndim < 1 or int(x.shape[-1]) != self.n:
+            raise ValueError(
+                f"plan is for length-{self.n} 1-D signals "
+                f"(optionally with leading batch dims), got {x.shape}")
+        if x.ndim == 1:
+            return self._fn(x)
+        fn = self._batched_fns.get(x.ndim)
+        if fn is None:
+            fn = self._fn
+            for _ in range(x.ndim - 1):
+                fn = jax.vmap(fn)
+            fn = jax.jit(fn)
+            self._batched_fns[x.ndim] = fn
+        return fn(x)
+
+    def execute_many(self, xs, *, pad_to: int | None = None) -> list:
+        """Serve a cohort of lines in ONE batched dispatch — the 1-D
+        sibling of ``PfftPlan.execute_many``."""
+        return _execute_many(self, xs, (self.n,), pad_to)
+
+
+def plan_pfft1_large(n: int, *, tune: TuneMode = "off",
+                     wisdom: str | None = None,
+                     config: PlanConfig | None = None,
+                     dtype: str = "complex64", n1: int | None = None,
+                     n2: int | None = None) -> Pfft1LargePlan:
+    """Plan one huge 1-D line through the EFFT four-step pipeline.
+
+    ``n1``/``n2`` pin the factorization (default: most-square split —
+    ``four_step_factors``); a non-default split enters the wisdom key as
+    a ``part=`` detail, since the best row-FFT variant depends on which
+    lengths the two phases actually run at.
+    """
+    if tune not in ("off", "estimate", "measure"):
+        raise ValueError(f"tune must be 'off'|'estimate'|'measure', got {tune!r}")
+    if np.dtype(dtype).kind != "c":
+        raise ValueError(
+            f"plan_pfft1_large transforms complex input, got dtype={dtype!r}")
+    from repro.core.pfft_large import four_step_factors, pfft1_large_apply
+    from repro.plan.tune import tune_pfft1_large
+
+    method = "pfft1-large"
+    f1, f2 = four_step_factors(n, n1=n1, n2=n2)
+    default = four_step_factors(n)
+    detail = f"{f1}x{f2}" if (f1, f2) != default else None
+
+    tuning: dict[str, Any] = {"mode": tune, "n1": f1, "n2": f2}
+
+    def build(cfg: PlanConfig) -> Pfft1LargePlan:
+        raw = functools.partial(pfft1_large_apply, config=cfg, n1=f1, n2=f2)
+        return Pfft1LargePlan(n=n, n1=f1, n2=f2, method=method, config=cfg,
+                              tuning=tuning, _fn=jax.jit(raw), dtype=dtype)
+
+    if config is not None:
+        tuning["source"] = "explicit"
+        return build(normalize_pad(config, "none"))
+
+    key = wisdom_key(n=n, dtype=dtype, p=1, method=method,
+                     backend=jax.default_backend(), detail=detail)
+    tuning["wisdom_key"] = key
+    if wisdom is not None:
+        hit = lookup_wisdom(wisdom, key)
+        if hit is not None:
+            plan, entry = hit
+            if isinstance(plan, PlanConfig):
+                tuning["source"] = "wisdom"
+                tuning["wisdom_entry"] = entry
+                return build(normalize_pad(plan, "none"))
+
+    if tune == "off":
+        tuning["source"] = "off"
+        return build(PlanConfig())
+
+    cfg, info = tune_pfft1_large(n, n1=f1, n2=f2, mode=tune,
+                                 dtype=np.dtype(dtype))
+    tuning.update(info)
+    tuning["source"] = tune
+    if wisdom is not None and tune == "measure":
+        record_wisdom(wisdom, key, cfg, mode="measure",
+                      time_s=info.get("time_s"))
+    return build(cfg)
+
+
+def pfft1_large(x: jnp.ndarray, *, tune: TuneMode = "off",
+                wisdom: str | None = None, n1: int | None = None,
+                n2: int | None = None) -> jnp.ndarray:
+    """One-shot planned four-step 1-D DFT of a long line.
+
+    Convenience wrapper over ``plan_pfft1_large`` for ``x``'s length and
+    dtype; use the plan directly for the plan-once/run-many lifecycle.
+    """
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(
+            f"pfft1_large transforms one 1-D line, got shape {x.shape}")
+    dt = x.dtype if jnp.issubdtype(x.dtype, jnp.complexfloating) \
+        else jnp.complex64
+    plan = plan_pfft1_large(int(x.shape[0]), tune=tune, wisdom=wisdom,
+                            dtype=str(np.dtype(dt)), n1=n1, n2=n2)
+    return plan.execute(x.astype(dt))

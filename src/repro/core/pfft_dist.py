@@ -61,7 +61,8 @@ from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["pfft2_distributed", "rpfft2_distributed", "irpfft2_distributed",
            "make_pfft2_fn", "ragged_row_layout",
-           "validate_spmd_schedule", "default_dist_pad_len"]
+           "validate_spmd_schedule", "default_dist_pad_len",
+           "require_mesh_divisible"]
 
 # Inverse of PlanConfig.dist_padded: the ``padded`` vocabulary of this
 # module mapped back onto the planner's pad strategies.
@@ -80,6 +81,16 @@ def default_dist_pad_len(n: int, padded: str | None) -> int:
     if padded == "czt":
         return 1 << int(np.ceil(np.log2(2 * n - 1)))
     return n
+
+
+def require_mesh_divisible(n: int, p: int, axis_name: str) -> None:
+    """The shared divisibility check of every distributed entry point: the
+    mesh axis size must divide N (SPMD shards are equal-sized).  One home
+    for the rule — and for the message, whose wording once drifted into
+    the inverted "N must divide the mesh axis" in the 3-D path."""
+    if int(p) > 0 and n % int(p):
+        raise ValueError(
+            f"N={n} must be divisible by mesh axis {axis_name}={int(p)}")
 
 
 def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
@@ -474,8 +485,7 @@ def pfft2_distributed(
     panels = config.pipeline_panels
     n = m.shape[0]
     p = mesh.shape[axis_name]
-    if n % p:
-        raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    require_mesh_divisible(n, p, axis_name)
     if panels > 1 and (n // p) % panels:
         raise ValueError(
             f"pipeline_panels={panels} must divide local rows {n // p}")
@@ -578,8 +588,7 @@ def rpfft2_distributed(
         raise ValueError(
             f"the real pipeline takes a real-valued matrix, got {m.dtype}")
     p = int(mesh.shape[axis_name])
-    if n % p:
-        raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    require_mesh_divisible(n, p, axis_name)
     if pad_len is None:
         pad_len = default_dist_pad_len(n, padded)
     nh = n // 2 + 1
@@ -643,8 +652,7 @@ def irpfft2_distributed(
         raise ValueError(
             f"expected the ({n}, {nh}) half spectrum, got {h.shape}")
     p = int(mesh.shape[axis_name])
-    if n % p:
-        raise ValueError(f"N={n} must be divisible by mesh axis {axis_name}={p}")
+    require_mesh_divisible(n, p, axis_name)
     hc = halfspec_cols(n, p)
     a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
                             split_axis=1, concat_axis=0, tiled=True)

@@ -14,7 +14,8 @@ try:  # AxisType landed after jax 0.4.37; Auto is the pre-AxisType default.
 except ImportError:  # pragma: no cover - version-dependent
     AxisType = None
 
-__all__ = ["make_production_mesh", "make_local_mesh", "make_fft_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_fft_mesh",
+           "make_pfft3_mesh"]
 
 
 def _make_mesh(shape, axes):
@@ -50,3 +51,29 @@ def make_fft_mesh(p: int | None = None, axis_name: str = "fft"):
     if p is None:
         p = jax.device_count()
     return _make_mesh((p,), (axis_name,))
+
+
+def make_pfft3_mesh(r: int | None = None, c: int | None = None,
+                    axis_names: tuple[str, str] = ("fft_r", "fft_c")):
+    """2-D ``r x c`` mesh for the pencil-parallel 3-D PFFT.
+
+    Defaults to the most-square factorization of every visible device
+    (``r <= c``); passing one of ``r``/``c`` derives the other from the
+    device count.  Both axis names enter the plan's ``topology_digest``,
+    so a transposed mesh gets distinct wisdom keys by construction.
+    """
+    if r is None and c is None:
+        q = jax.device_count()
+        r = 1
+        for f in range(int(q ** 0.5), 0, -1):
+            if q % f == 0:
+                r = f
+                break
+        c = q // r
+    elif r is None:
+        c = int(c)
+        r = jax.device_count() // c
+    elif c is None:
+        r = int(r)
+        c = jax.device_count() // r
+    return _make_mesh((int(r), int(c)), tuple(axis_names))

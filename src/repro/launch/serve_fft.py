@@ -56,7 +56,8 @@ import numpy as np
 
 from repro.plan.cache import PlanCache
 from repro.plan.config import PlanConfig
-from repro.plan.cost import CostParams, estimate_cost, estimate_schedule_cost
+from repro.plan.cost import (CostParams, estimate_cost, estimate_pfft3_cost,
+                             estimate_schedule_cost)
 
 __all__ = ["AdmissionError", "DeadlineExceeded", "CohortKey",
            "RequestTicket", "FFTService"]
@@ -66,6 +67,12 @@ _clock = time.perf_counter   # monotonic: latency math must not see NTP steps
 _REAL_PREFIX = "rfft-"
 _CTYPES = {"complex64", "complex128"}
 _RTYPES = {"float32", "float64"}
+
+# Method families with non-square request shapes: cubic N^3 signals
+# (``plan_pfft3``) and huge 1-D lines (``plan_pfft1_large``).  Everything
+# else serves the square (N, N) transform through ``plan_pfft``.
+_PFFT3_METHODS = frozenset({"pfft3-lb"})
+_LARGE1D_METHODS = frozenset({"pfft1-large"})
 
 
 def _bucket(b: int, quantum: int = 4) -> int:
@@ -180,6 +187,10 @@ class FFTService:
     methods:
         The admissible ``method`` values (defense against a client
         naming an arbitrary plan method); default ``("lb", "rfft-lb")``.
+        ``"pfft3-lb"`` (cubic N^3 signals via ``plan_pfft3``) and
+        ``"pfft1-large"`` (huge 1-D lines via ``plan_pfft1_large``) are
+        also servable when listed here — their requests are validated
+        against their own shapes and priced with their own cost terms.
     tick_budget_s:
         Predicted-makespan budget of one tick — the latency the queue
         is allowed to add while coalescing.  Cohorts beyond it are
@@ -271,15 +282,32 @@ class FFTService:
         if cached is not None:
             return cached
         plan = self._cache.peek(key)
-        if plan is not None:
+        if key.method in _PFFT3_METHODS:
+            # Cubes: three 2-D-sized passes per signal; no cross-signal
+            # dispatch amortisation is modelled, so the law is linear.
+            cfg = plan.config if plan is not None else PlanConfig()
+            p1 = estimate_pfft3_cost(cfg, n=key.n, params=self._params)
+            law = (p1, p1)
+        elif key.method in _LARGE1D_METHODS:
+            # Lines: the four-step estimate at the plan's factorization.
+            from repro.plan.tune import tune_pfft1_large
+            if plan is not None:
+                _, info = tune_pfft1_large(key.n, n1=plan.n1, n2=plan.n2,
+                                           params=self._params)
+            else:
+                _, info = tune_pfft1_large(key.n, params=self._params)
+            p1 = float(info["ranked"][0][1])
+            law = (p1, p1)
+        elif plan is not None:
             p1 = estimate_schedule_cost(plan.schedule, params=self._params)
             p2 = estimate_schedule_cost(plan.schedule, params=self._params,
                                         batch=2)
+            law = (p1, max(p2 - p1, 0.0))
         else:
             cfg = PlanConfig(real=key.method.startswith(_REAL_PREFIX))
             p1 = estimate_cost(cfg, n=key.n, params=self._params)
             p2 = estimate_cost(cfg, n=key.n, params=self._params, batch=2)
-        law = (p1, max(p2 - p1, 0.0))
+            law = (p1, max(p2 - p1, 0.0))
         self._price_memo[key] = law
         return law
 
@@ -307,7 +335,17 @@ class FFTService:
         request still queued past it is shed, never served late.
         """
         arr = np.asarray(m)
-        if arr.ndim != 2 or arr.shape[0] != arr.shape[1]:
+        if method in _PFFT3_METHODS:
+            if arr.ndim != 3 or len(set(arr.shape)) != 1:
+                raise ValueError(
+                    f"method {method!r} serves cubic (N, N, N) signals, "
+                    f"got {arr.shape}")
+        elif method in _LARGE1D_METHODS:
+            if arr.ndim != 1:
+                raise ValueError(
+                    f"method {method!r} serves 1-D length-N lines, "
+                    f"got {arr.shape}")
+        elif arr.ndim != 2 or arr.shape[0] != arr.shape[1]:
             raise ValueError(
                 f"serve_fft transforms square (N, N) signals, got "
                 f"{arr.shape}; batch by submitting one request per signal")
@@ -350,22 +388,36 @@ class FFTService:
 
     def _get_plan(self, key: CohortKey):
         def build():
-            from repro.core.api import plan_pfft
-            plan = plan_pfft(key.n, p=self.p, fpms=self.fpms,
-                             method=key.method, eps=self.eps,
-                             tune=self.tune, wisdom=self.wisdom,
-                             dtype=key.dtype)
+            if key.method in _PFFT3_METHODS:
+                from repro.core.api import plan_pfft3
+                plan = plan_pfft3(key.n, p=min(self.p, key.n),
+                                  tune=self.tune, wisdom=self.wisdom,
+                                  dtype=key.dtype)
+            elif key.method in _LARGE1D_METHODS:
+                from repro.core.api import plan_pfft1_large
+                plan = plan_pfft1_large(key.n, tune=self.tune,
+                                        wisdom=self.wisdom, dtype=key.dtype)
+            else:
+                from repro.core.api import plan_pfft
+                plan = plan_pfft(key.n, p=self.p, fpms=self.fpms,
+                                 method=key.method, eps=self.eps,
+                                 tune=self.tune, wisdom=self.wisdom,
+                                 dtype=key.dtype)
             src = plan.tuning.get("source", "?")
             self._stats["sources"][src] = \
                 self._stats["sources"].get(src, 0) + 1
             if self.write_back and self.wisdom and src == "estimate":
                 # Measure picks were recorded by plan_pfft already; the
                 # store is advisory here, so a wedged lock is a counter,
-                # not a stalled tick.
+                # not a stalled tick.  The 3-D/1-D families persist their
+                # single config (they have no segment schedule).
                 from repro.plan.wisdom import record_wisdom
+                payload = getattr(plan, "schedule", None)
+                if payload is None:
+                    payload = plan.config
                 try:
                     record_wisdom(self.wisdom, plan.tuning["wisdom_key"],
-                                  plan.schedule, mode="estimate",
+                                  payload, mode="estimate",
                                   retries=2, lock_timeout_s=5.0)
                 except TimeoutError:
                     self._stats["wisdom_write_timeouts"] += 1

@@ -25,17 +25,20 @@ from repro.plan.groups import (DeviceGroupProgram, device_group_program,
 from repro.plan.pads import (czt_fft_lengths, fpm_pad_lengths,
                              rfft_pad_lengths)
 from repro.plan.cost import (CostParams, dist_comm_bytes, estimate_cost,
-                             estimate_grouped_cost, estimate_schedule_cost,
-                             halfspec_cols, phase_dispatch_count)
+                             estimate_grouped_cost, estimate_pfft3_cost,
+                             estimate_schedule_cost, halfspec_cols,
+                             pfft3_comm_bytes, phase_dispatch_count)
 from repro.plan.wisdom import (WISDOM_VERSION, load_wisdom, lookup_wisdom,
                                partition_digest, record_wisdom,
                                topology_digest, wisdom_key)
 from repro.plan.tune import (candidate_configs, dist_panel_space,
                              grouped_dist_schedule, measure_configs,
-                             measure_dist_configs, measure_rfft_configs,
-                             measure_rfft_dist_configs,
+                             measure_dist_configs, measure_pfft3_configs,
+                             measure_rfft_configs,
+                             measure_rfft_dist_configs, pfft3_panel_space,
                              segment_candidate_configs, tune_config,
                              tune_dist_config, tune_dist_schedule,
+                             tune_pfft1_large, tune_pfft3,
                              tune_rfft, tune_rfft_dist, tune_schedule)
 from repro.plan.calibrate import fit_cost_params
 
@@ -46,14 +49,18 @@ __all__ = [
     "DeviceGroupProgram", "device_group_program", "spmd_program_config",
     "czt_fft_lengths", "fpm_pad_lengths", "rfft_pad_lengths",
     "CostParams", "dist_comm_bytes", "estimate_cost",
-    "estimate_grouped_cost", "estimate_schedule_cost",
-    "halfspec_cols", "phase_dispatch_count",
+    "estimate_grouped_cost", "estimate_pfft3_cost",
+    "estimate_schedule_cost", "halfspec_cols", "pfft3_comm_bytes",
+    "phase_dispatch_count",
     "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "partition_digest",
     "record_wisdom", "topology_digest", "wisdom_key",
     "candidate_configs", "dist_panel_space", "grouped_dist_schedule",
-    "measure_configs", "measure_dist_configs", "measure_rfft_configs",
-    "measure_rfft_dist_configs", "segment_candidate_configs",
+    "measure_configs", "measure_dist_configs", "measure_pfft3_configs",
+    "measure_rfft_configs",
+    "measure_rfft_dist_configs", "pfft3_panel_space",
+    "segment_candidate_configs",
     "tune_config", "tune_dist_config", "tune_dist_schedule",
+    "tune_pfft1_large", "tune_pfft3",
     "tune_rfft", "tune_rfft_dist", "tune_schedule",
     "fit_cost_params",
 ]

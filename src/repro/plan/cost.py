@@ -36,7 +36,8 @@ from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["CostParams", "dist_comm_bytes", "estimate_cost",
            "estimate_grouped_cost", "estimate_schedule_cost",
-           "halfspec_cols", "phase_dispatch_count"]
+           "estimate_pfft3_cost", "halfspec_cols", "phase_dispatch_count",
+           "pfft3_comm_bytes"]
 
 _COMPLEX64_BYTES = 8
 # Bluestein computes one N-point DFT as ~3 length-m FFTs (forward, kernel
@@ -130,6 +131,61 @@ def dist_comm_bytes(n: int, p: int, *, itemsize: int = _COMPLEX64_BYTES,
         return 0.0
     cols = halfspec_cols(n, p) if real else n
     return float(n) * float(cols) * itemsize * (p - 1) / p
+
+
+def pfft3_comm_bytes(n: int, q: int, *,
+                     itemsize: int = _COMPLEX64_BYTES) -> float:
+    """Cross-device bytes of ONE pencil exchange round over a mesh axis of
+    size ``q``.
+
+    In a tiled all_to_all over ``q`` peers each device keeps ``1/q`` of
+    its block and sends the rest, and every element of the N^3 cube lives
+    on exactly one device, so one round moves ``N^3 * itemsize * (q-1)/q``
+    bytes in total (0 on a degenerate 1-wide axis — the exchange is a
+    local reshuffle).  The pencil transform prices *two* rounds (over the
+    ``c`` axis, then the ``r`` axis) where the slab pays three — the
+    saving ``estimate_pfft3_cost`` makes visible to the tuner.
+    """
+    if q <= 1:
+        return 0.0
+    return float(n) ** 3 * itemsize * (q - 1) / q
+
+
+def estimate_pfft3_cost(config: PlanConfig, *, n: int, r: int = 1,
+                        c: int = 1, params: CostParams | None = None,
+                        pad_len: int | None = None,
+                        itemsize: int = _COMPLEX64_BYTES) -> float:
+    """Predicted seconds of the pencil-parallel 3-D PFFT under ``config``.
+
+    Three local passes — each device transforms its ``N^2/(r*c)`` pencil
+    rows at the effective length, paying the block's HBM round trip and a
+    dispatch (plus one extra dispatch per extra pipeline panel) — and two
+    priced exchange rounds: ``pfft3_comm_bytes`` over the ``c`` axis then
+    the ``r`` axis, each overlapped by the panel factor exactly like the
+    2-D model's comm term.  ``r = c = 1`` prices the single-host
+    transform (no comm).  Like the rest of the model, *ranking* is the
+    point, not absolute seconds.
+    """
+    if params is None:
+        params = CostParams.for_backend()
+    q = max(int(r), 1) * max(int(c), 1)
+    rows = max(n * n // q, 1)
+    length = int(pad_len) if pad_len else n
+    mult = _compute_multiplier(config, length, params)
+    compute = float(fft_flops(rows, length)) / params.nominal_flops * mult
+    traffic = 2.0 * rows * n * itemsize / params.hbm_bytes_per_s
+    k = config.pipeline_panels
+    phase = compute + traffic + k * params.dispatch_overhead_s
+    comm = 0.0
+    for q_ax in (int(c), int(r)):
+        bytes_ax = pfft3_comm_bytes(n, q_ax, itemsize=itemsize)
+        if bytes_ax:
+            t = bytes_ax / params.interconnect_bytes_per_s \
+                + params.comm_latency_s
+            if k > 1:
+                t *= 1.0 - params.panel_overlap * (k - 1) / k
+            comm += t
+    return 3.0 * phase + comm
 
 
 def _segment_work(n: int, d, pad_lengths) -> list[tuple[int, int]]:

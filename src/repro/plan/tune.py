@@ -28,7 +28,8 @@ from repro.core.fpm import FPMSet
 from repro.plan.config import PlanConfig
 from repro.plan.cost import (CostParams, _compute_multiplier, _segment_work,
                              dist_comm_bytes, estimate_cost,
-                             estimate_grouped_cost, estimate_schedule_cost)
+                             estimate_grouped_cost, estimate_pfft3_cost,
+                             estimate_schedule_cost, pfft3_comm_bytes)
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["candidate_configs", "segment_candidate_configs",
@@ -36,7 +37,9 @@ __all__ = ["candidate_configs", "segment_candidate_configs",
            "tune_schedule", "tune_dist_config", "tune_dist_schedule",
            "grouped_dist_schedule", "dist_panel_space",
            "measure_rfft_configs", "measure_rfft_dist_configs",
-           "tune_rfft", "tune_rfft_dist"]
+           "tune_rfft", "tune_rfft_dist",
+           "pfft3_panel_space", "measure_pfft3_configs", "tune_pfft3",
+           "tune_pfft1_large"]
 
 
 def _is_pow2(n: int) -> bool:
@@ -642,6 +645,339 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
     info["dist"]["local_phase_s"] = float(local_s)
     info["dist"]["comm_time_meas_s"] = float(
         max(measured[winner] - 2.0 * local_s, 0.0))
+    return winner, info
+
+
+# ------------------------------------------------------------------ pfft3
+
+def pfft3_panel_space(n: int, r: int, c: int, max_panels: int = 8
+                      ) -> tuple[int, ...]:
+    """Candidate ``pipeline_panels`` for an N^3 problem on an r x c pencil
+    mesh: the powers of two up to ``max_panels`` dividing *both* local
+    extents (``pfft3_pencil`` splits panels along whichever block axis the
+    current exchange leaves alone, so k must divide N/r and N/c alike).
+    The one home of the rule — the tuner, ``plan_pfft3(mesh=...)``, and
+    the microbench all enumerate (and digest) the same space.
+    """
+    import math
+
+    r, c = int(r), int(c)
+    if r <= 0 or c <= 0 or n % r or n % c:
+        return (1,)
+    g = math.gcd(n // r, n // c)
+    ks = [k for k in (1, 2, 4, 8) if k <= max_panels and g % k == 0]
+    return tuple(ks) or (1,)
+
+
+def _measure_pfft3_local_pass(cfg: PlanConfig, n: int, r: int, c: int,
+                              pad_len: int, dtype, rounds: int) -> float:
+    """Seconds of one *local* axis pass of the pencil pipeline: the
+    row-FFT program one device runs on its (N/r · N/c, N) pencil rows,
+    without either ``all_to_all``.  Subtracting three of these from the
+    end-to-end time turns a pencil measurement into a *comm* sample
+    covering the transform's two exchange rounds."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pfft_dist import _local_fft  # lazy: core imports plan
+
+    rows = max((n // max(r, 1)) * (n // max(c, 1)), 1)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((rows, n))
+                     + 1j * rng.standard_normal((rows, n))).astype(dtype))
+    fn = jax.jit(lambda b: _local_fft(b, n, padded=cfg.dist_padded,
+                                      pad_len=pad_len, config=cfg,
+                                      backend=None))
+    jax.block_until_ready(fn(x))  # compile
+    return min(_timed_min([(cfg, fn)], x, rounds).values())
+
+
+def measure_pfft3_configs(configs: Sequence[PlanConfig], n: int, mesh,
+                          axis_names: Sequence[str] = ("fft_r", "fft_c"), *,
+                          pad_len: int | None = None, dtype=np.complex64,
+                          rounds: int = 3) -> dict[PlanConfig, float]:
+    """End-to-end on-device seconds of ``pfft3_pencil`` per config.
+
+    The 3-D sibling of ``measure_dist_configs``: times the full pencil
+    pipeline — three local passes, both all_to_all rounds, pipelined
+    panels, the final global transpose — on the caller's actual 2-D
+    ``Mesh``.  Same shuffled-interleaved per-config-min harness
+    (``_timed_min``); the cube is laid out pencil-sharded over
+    ``axis_names`` first so placement cost is not billed to whichever
+    config runs first.  One call races one *orientation* — callers
+    (``tune_pfft3``) merge per-orientation races themselves.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.pfft3d import pfft3_pencil  # lazy
+
+    axes = tuple(axis_names)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((n, n, n))
+                     + 1j * rng.standard_normal((n, n, n))).astype(dtype))
+    x = jax.device_put(x, NamedSharding(mesh, P(axes[0], axes[1], None)))
+    pairs = []
+    for cfg in configs:
+        fn = jax.jit(functools.partial(pfft3_pencil, mesh=mesh,
+                                       axis_names=axes, config=cfg,
+                                       pad_len=pad_len))
+        jax.block_until_ready(fn(x))  # compile
+        pairs.append((cfg, fn))
+    return _timed_min(pairs, x, rounds)
+
+
+def tune_pfft3(n: int, mesh=None,
+               axis_names: Sequence[str] = ("fft_r", "fft_c"), *,
+               mode: str = "estimate", pad: str = "none",
+               pad_len: int | None = None,
+               params: CostParams | None = None, top_k: int = 3,
+               panels: Sequence[int] | None = None, dtype=np.complex64,
+               reps: int = 3, measure_retries: int = 0
+               ) -> tuple[PlanConfig, tuple[str, str] | None, dict]:
+    """Pick the best (config, pencil orientation) for the 3-D transform.
+
+    Returns ``(config, axes, info)`` where ``axes`` is the winning
+    ``(row_axis, col_axis)`` orientation of ``pfft3_pencil`` — the extra
+    degree of freedom the 2-D mesh adds over ``tune_dist_config``: on a
+    rectangular r x c mesh the first exchange crosses the *column* axis,
+    so swapping which mesh axis plays row changes which round moves the
+    bigger fraction of the cube.  Both orientations enter the estimate
+    ranking (priced via ``estimate_pfft3_cost``), and measure mode races
+    the distinct finalists of each through the full pencil pipeline.
+
+    ``mesh=None`` is the single-host problem (r = c = 1, ``axes=None``):
+    the ranking degenerates to the compute terms, and measure mode times
+    the jitted single-host ``pfft3_lb`` instead of the pencil program.
+    ``info["pfft3"]`` carries the topology facts and, after a measured
+    run, the comm sample ``comm_time_meas_s = total − 3·local_pass``
+    (clamped at 0) covering both exchange rounds.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    axes0 = tuple(axis_names)
+    if mesh is not None:
+        r = int(mesh.shape[axes0[0]])
+        c = int(mesh.shape[axes0[1]])
+        if n % r or n % c:
+            raise ValueError(f"N={n} must be divisible by both mesh axes "
+                             f"({axes0[0]}={r}, {axes0[1]}={c})")
+    else:
+        r = c = 1
+    if panels is None:
+        panels = pfft3_panel_space(n, r, c)
+    if params is None:
+        params = CostParams.for_backend()
+    comm_bytes = pfft3_comm_bytes(n, c) + pfft3_comm_bytes(n, r)
+
+    # ``batched`` shapes segment dispatch (one whole-pencil segment here)
+    # and the pencil pipeline is unfused by construction — both knobs
+    # would only burn finalist slots on identical or invalid programs.
+    cands = [cfg for cfg in candidate_configs(n, pad=pad, d=None,
+                                              panels=panels)
+             if cfg.batched and not cfg.fused]
+    # Orientation space: which mesh axis plays "row".  On a square mesh
+    # (or single host) the transposed program is identical.
+    if mesh is not None and r != c:
+        orientations = [axes0, (axes0[1], axes0[0])]
+    elif mesh is not None:
+        orientations = [axes0]
+    else:
+        orientations = [None]
+
+    def est(cfg: PlanConfig, waxes) -> float:
+        if waxes is None:
+            r_o, c_o = 1, 1
+        else:
+            r_o = int(mesh.shape[waxes[0]])
+            c_o = int(mesh.shape[waxes[1]])
+        return estimate_pfft3_cost(cfg, n=n, r=r_o, c=c_o, params=params,
+                                   pad_len=pad_len)
+
+    ranked = sorted(((cfg, waxes, est(cfg, waxes))
+                     for cfg in cands for waxes in orientations),
+                    key=lambda kv: kv[2])
+    info: dict = {
+        "mode": mode,
+        "ranked": [(cfg.to_dict(),
+                    list(waxes) if waxes is not None else None, float(t))
+                   for cfg, waxes, t in ranked],
+        "pfft3": {
+            "r": r, "c": c,
+            "axis_names": list(axes0) if mesh is not None else None,
+            "comm_bytes": float(comm_bytes),
+            "comm_time_est_s": float(
+                sum(b / params.interconnect_bytes_per_s
+                    + params.comm_latency_s
+                    for b in (pfft3_comm_bytes(n, c), pfft3_comm_bytes(n, r))
+                    if b)),
+        },
+    }
+
+    if mode == "estimate":
+        cfg, waxes, _ = ranked[0]
+        info["orientation"] = list(waxes) if waxes is not None else None
+        return cfg, waxes, info
+    if r * c <= 1 and mesh is not None:
+        info["measure_fallback"] = "1-device mesh: measure == estimate"
+        cfg, waxes, _ = ranked[0]
+        info["orientation"] = list(waxes) if waxes is not None else None
+        return cfg, waxes, info
+
+    # One finalist per distinct *pencil* program: single-host behavior key
+    # plus panel count plus orientation (orientation changes which round
+    # crosses which communicator even when the local program is the same).
+    finalists, seen = [], set()
+    for cfg, waxes, _ in ranked:
+        key = (_behavior_key(cfg, n, None, None), cfg.pipeline_panels, waxes)
+        if key not in seen:
+            seen.add(key)
+            finalists.append((cfg, waxes))
+        if len(finalists) >= max(top_k, 1):
+            break
+
+    def run_races() -> dict:
+        merged: dict = {}
+        if mesh is None:
+            # Single host: time the production single-host program.
+            import jax
+            import jax.numpy as jnp
+            from repro.core.pfft3d import pfft3_lb  # lazy
+
+            rng = np.random.default_rng(0)
+            x = jnp.asarray((rng.standard_normal((n, n, n))
+                             + 1j * rng.standard_normal((n, n, n))
+                             ).astype(dtype))
+            pairs = []
+            for cfg, _ in finalists:
+                fn = jax.jit(lambda m, c=cfg: pfft3_lb(m, 1, config=c))
+                jax.block_until_ready(fn(x))  # compile
+                pairs.append((cfg, fn))
+            for cfg, t in _timed_min(pairs, x, reps).items():
+                merged[(cfg, None)] = t
+            return merged
+        for waxes in orientations:
+            group = [cfg for cfg, wa in finalists if wa == waxes]
+            if not group:
+                continue
+            times = measure_pfft3_configs(group, n, mesh, waxes,
+                                          pad_len=pad_len, dtype=dtype,
+                                          rounds=reps)
+            for cfg, t in times.items():
+                merged[(cfg, waxes)] = t
+        return merged
+
+    try:
+        measured = _measure_with_retry(run_races, measure_retries)
+    except Exception as err:
+        if measure_retries <= 0:
+            raise
+        info["measure_fallback"] = (
+            f"measurement failed after {measure_retries} retries: {err!r}")
+        cfg, waxes, _ = ranked[0]
+        info["orientation"] = list(waxes) if waxes is not None else None
+        return cfg, waxes, info
+    wcfg, waxes = min(measured, key=measured.get)
+    info["measured"] = [(cfg.to_dict(),
+                         list(wa) if wa is not None else None, float(t))
+                        for (cfg, wa), t in measured.items()]
+    info["time_s"] = float(measured[(wcfg, waxes)])
+    info["orientation"] = list(waxes) if waxes is not None else None
+
+    # Comm sample: end-to-end minus the three measured local passes of
+    # the winning program.  Clamped at 0 — pipelined panels can hide comm
+    # below the subtraction's noise floor.
+    eff_len = pad_len
+    if eff_len is None:
+        from repro.core.pfft_dist import default_dist_pad_len
+        eff_len = default_dist_pad_len(n, wcfg.dist_padded)
+    try:
+        local_s = _measure_with_retry(
+            lambda: _measure_pfft3_local_pass(wcfg, n, r, c, eff_len, dtype,
+                                              reps),
+            measure_retries)
+    except Exception as err:
+        if measure_retries <= 0:
+            raise
+        info["pfft3"]["comm_sample_error"] = repr(err)
+        return wcfg, waxes, info
+    info["pfft3"]["local_pass_s"] = float(local_s)
+    info["pfft3"]["comm_time_meas_s"] = float(
+        max(measured[(wcfg, waxes)] - 3.0 * local_s, 0.0))
+    return wcfg, waxes, info
+
+
+def tune_pfft1_large(n: int, *, n1: int | None = None, n2: int | None = None,
+                     mode: str = "estimate",
+                     params: CostParams | None = None, top_k: int = 3,
+                     dtype=np.complex64, reps: int = 3
+                     ) -> tuple[PlanConfig, dict]:
+    """Tune the four-step huge-1-D transform; returns (config, info).
+
+    The four-step decomposition runs two row-FFT phases at lengths n2 and
+    n1 (``core.pfft_large``), so the estimate prices each phase at its
+    own length with the config's backend multiplier — a radix kernel that
+    helps the pow2 side may be a fallback no-op on the other.  Measure
+    mode times the jitted production ``pfft1_large_apply`` end to end.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    from repro.core.fpm import fft_flops
+    from repro.core.pfft_large import four_step_factors  # lazy
+
+    n1, n2 = four_step_factors(n, n1=n1, n2=n2)
+    if params is None:
+        params = CostParams.for_backend()
+
+    radices: list[int | None] = [None]
+    if _is_pow2(n1) or _is_pow2(n2):
+        radices += [2, 4]
+    cands = [PlanConfig(radix=rad) for rad in radices]
+
+    def est(cfg: PlanConfig) -> float:
+        compute = (
+            float(fft_flops(n1, n2)) / params.nominal_flops
+            * _compute_multiplier(cfg, n2, params)
+            + float(fft_flops(n2, n1)) / params.nominal_flops
+            * _compute_multiplier(cfg, n1, params))
+        itemsize = np.dtype(dtype).itemsize
+        traffic = 4.0 * n * itemsize / params.hbm_bytes_per_s
+        return compute + traffic + 2.0 * params.dispatch_overhead_s
+
+    ranked = sorted(((cfg, est(cfg)) for cfg in cands), key=lambda kv: kv[1])
+    info: dict = {
+        "mode": mode,
+        "ranked": [(cfg.to_dict(), float(t)) for cfg, t in ranked],
+        "four_step": {"n1": int(n1), "n2": int(n2)},
+    }
+    if mode == "estimate":
+        return ranked[0][0], info
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pfft_large import pfft1_large_apply  # lazy
+
+    finalists, seen = [], set()
+    for cfg, _ in ranked:
+        key = (_length_backend(cfg, n1), _length_backend(cfg, n2))
+        if key not in seen:
+            seen.add(key)
+            finalists.append(cfg)
+        if len(finalists) >= max(top_k, 1):
+            break
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal(n)
+                     + 1j * rng.standard_normal(n)).astype(dtype))
+    pairs = []
+    for cfg in finalists:
+        fn = jax.jit(lambda v, c=cfg: pfft1_large_apply(v, config=c, n1=n1,
+                                                        n2=n2))
+        jax.block_until_ready(fn(x))  # compile
+        pairs.append((cfg, fn))
+    measured = _timed_min(pairs, x, reps)
+    winner = min(measured, key=measured.get)
+    info["measured"] = [(cfg.to_dict(), float(t))
+                        for cfg, t in measured.items()]
+    info["time_s"] = float(measured[winner])
     return winner, info
 
 

@@ -103,7 +103,7 @@ def partition_digest(d, pad_lengths=None) -> str:
     return format(zlib.crc32(raw), "08x")
 
 
-def topology_digest(mesh=None, axis_name: str = "fft", *,
+def topology_digest(mesh=None, axis_name="fft", *,
                     devices: int | None = None, platform: str | None = None,
                     panels=(1,)) -> str:
     """The ``topology`` field of a distributed wisdom key.
@@ -114,7 +114,22 @@ def topology_digest(mesh=None, axis_name: str = "fft", *,
     pipeline-panel counts the tuner raced (a different panel space is a
     different tuning experiment).  Deliberately human-readable — a store
     should say *which* pod an entry was measured on, not just hash it.
+
+    ``axis_name`` may be a *sequence* of axis names (the pencil-parallel
+    3-D pipeline's 2-D mesh): the digest then carries one ``<size>x<name>``
+    term per axis, '+'-joined (e.g. ``4xfft_r+2xfft_c.cpu.k1-2``).  The
+    form is injective against 1-D digests ('+' never appears there) and
+    against the transposed mesh (``4xfft_r+2xfft_c != 2xfft_r+4xfft_c``),
+    so a plan measured on one pencil shape is never served to another.
     """
+    if not isinstance(axis_name, str):
+        if mesh is None:
+            raise ValueError("a multi-axis topology_digest needs mesh=")
+        axes = "+".join(f"{int(mesh.shape[a])}x{a}" for a in axis_name)
+        if platform is None:
+            platform = mesh.devices.flat[0].platform
+        ks = "-".join(str(int(k)) for k in sorted(set(panels))) or "1"
+        return f"{axes}.{platform}.k{ks}"
     if devices is None:
         if mesh is None:
             raise ValueError("topology_digest needs a mesh or devices=")

@@ -56,6 +56,28 @@ def test_topology_digest_from_mesh():
         topology_digest()  # neither mesh nor devices=
 
 
+def test_topology_digest_two_axes():
+    # The pencil pipeline's 2-D mesh: one <size>x<name> term per axis,
+    # '+'-joined — injective against every 1-D digest ('+' never appears
+    # there) and against the transposed axis order.
+    mesh = jax.make_mesh((1, 1), ("fft_r", "fft_c"))
+    got = topology_digest(mesh, ("fft_r", "fft_c"), panels=(1, 2))
+    assert got == f"1xfft_r+1xfft_c.{jax.default_backend()}.k1-2"
+    swapped = topology_digest(mesh, ("fft_c", "fft_r"), panels=(1, 2))
+    assert swapped != got
+    with pytest.raises(ValueError):
+        topology_digest(None, ("fft_r", "fft_c"))  # multi-axis needs mesh=
+
+
+def test_pfft3_panel_space_divides_both_extents():
+    from repro.plan.tune import pfft3_panel_space
+    assert pfft3_panel_space(64, 4, 2) == (1, 2, 4, 8)
+    assert pfft3_panel_space(16, 4, 2) == (1, 2, 4)   # gcd(4, 8) = 4
+    assert pfft3_panel_space(12, 3, 2) == (1, 2)      # gcd(4, 6) = 2
+    assert pfft3_panel_space(12, 5, 2) == (1,)        # 5 does not divide 12
+    assert pfft3_panel_space(64, 0, 2) == (1,)
+
+
 def test_dist_panel_space_divisibility():
     """Satellite regression: 8 is reachable by default — the (1, 2, 4, 8)
     literal used to be silently capped at max_panels=4, so the 8-panel

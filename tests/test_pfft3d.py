@@ -1,13 +1,19 @@
-"""3-D DFT extension (paper future work §VII): oracles + distributed."""
+"""3-D DFT extension (paper future work §VII): oracles + distributed.
 
-import os
-import subprocess
-import sys
+The padded-FPM tests compare against an explicit *padded-DFT oracle* —
+numpy reproducing ``_pfft3``'s pad-crop-rotate dataflow bin for bin —
+not a finiteness smoke check: the historical drift in ``pfft3_fpm_pad``
+(a private pad-length loop, no ``normalize_pad`` routing) was exactly
+the kind of semantic slip a finiteness check can never catch.
+"""
 
 import numpy as np
+import pytest
 import jax.numpy as jnp
 
-from repro.core.pfft3d import pfft3_fpm, pfft3_fpm_pad, pfft3_lb
+from repro.core.pfft3d import (pfft3_fpm, pfft3_fpm_pad, pfft3_lb,
+                               pfft3_pencil)
+from repro.plan.config import PlanConfig
 from test_pfft import fpms_for
 
 
@@ -23,6 +29,13 @@ def test_pfft3_lb_matches_fftn():
                                np.asarray(jnp.fft.fftn(m)), atol=2e-2)
 
 
+def test_pfft3_lb_uneven_partition():
+    # lb partitions split 14 rows over 4 segments unevenly by design.
+    m = cube(14)
+    np.testing.assert_allclose(np.asarray(pfft3_lb(m, 4)),
+                               np.asarray(jnp.fft.fftn(m)), atol=2e-2)
+
+
 def test_pfft3_fpm_matches_fftn():
     m = cube(16)
     out, part = pfft3_fpm(m, fpms_for(16), return_partition=True)
@@ -31,18 +44,146 @@ def test_pfft3_fpm_matches_fftn():
                                atol=2e-2)
 
 
-def test_pfft3_pad_runs_and_is_finite():
+def test_pfft3_rejects_non_cube():
+    with pytest.raises(ValueError, match="cubic"):
+        pfft3_lb(jnp.zeros((4, 4, 8), jnp.complex64), 2)
+
+
+# ---------------------------------------------------------------- fpm-pad
+
+def _padded_dft_oracle(m, d, pads):
+    """Numpy mirror of ``_pfft3``'s dataflow: three axis passes, each
+    padding every segment's rows to its declared length, transforming at
+    that length, cropping back to n bins, then rotating the axes."""
+    m = np.asarray(m)
+    n = m.shape[0]
+    for _ in range(3):
+        out = np.empty_like(m)
+        start = 0
+        for i, rows in enumerate(np.asarray(d)):
+            rows = int(rows)
+            if rows == 0:
+                continue
+            seg = m[start:start + rows].reshape(-1, n)
+            length = int(pads[i]) if pads is not None and pads[i] > n else n
+            if length > n:
+                seg = np.fft.fft(
+                    np.pad(seg, ((0, 0), (0, length - n))), axis=-1)[:, :n]
+            else:
+                seg = np.fft.fft(seg, axis=-1)
+            out[start:start + rows] = seg.reshape((rows, n, n))
+            start += rows
+        m = np.moveaxis(out, -1, 0)
+    return m
+
+
+def test_pfft3_pad_matches_padded_dft_oracle():
     m = cube(12)
     out, part, pads = pfft3_fpm_pad(m, fpms_for(12), return_partition=True)
     assert out.shape == (12, 12, 12)
-    assert bool(jnp.all(jnp.isfinite(jnp.abs(out))))
+    ref = _padded_dft_oracle(m, part.d, pads)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-2)
 
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys; sys.path.insert(0, {src!r})
+def test_pfft3_pad_ignores_drifted_config_pad():
+    # The method owns the pad semantics (normalize_pad): an explicit
+    # config whose pad field drifted to czt must still run the paper's
+    # pad-and-crop program, bin for bin.
+    m = cube(12)
+    base, part, pads = pfft3_fpm_pad(m, fpms_for(12), return_partition=True)
+    drifted = pfft3_fpm_pad(m, fpms_for(12), config=PlanConfig(pad="czt"))
+    np.testing.assert_allclose(np.asarray(drifted), np.asarray(base),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(drifted),
+                               _padded_dft_oracle(m, part.d, pads), atol=2e-2)
+
+
+# ------------------------------------------------------------ divisibility
+
+def test_divisibility_message_is_not_inverted():
+    # The 3-D path's message once drifted into the inverted "N must
+    # divide the mesh axis"; the shared helper is the one home of the
+    # correctly-worded rule for every distributed entry point.
+    from repro.core.pfft_dist import require_mesh_divisible
+    with pytest.raises(ValueError,
+                       match=r"N=10 must be divisible by mesh axis fft_r=4"):
+        require_mesh_divisible(10, 4, "fft_r")
+    require_mesh_divisible(12, 4, "fft_r")  # divides: no raise
+
+
+def test_pencil_rejects_fused_config():
+    import jax
+    mesh = jax.make_mesh((1, 1), ("fft_r", "fft_c"))
+    with pytest.raises(ValueError, match="unfused"):
+        pfft3_pencil(cube(8), mesh, config=PlanConfig(radix=4, fused=True))
+
+
+# --------------------------------------------------------------- planners
+
+def test_plan_pfft3_single_host_matches_fftn():
+    from repro.core.api import plan_pfft3
+    m = cube(12)
+    plan = plan_pfft3(12, p=3, tune="estimate")
+    assert plan.tuning["source"] == "estimate"
+    np.testing.assert_allclose(np.asarray(plan.execute(m)),
+                               np.asarray(jnp.fft.fftn(m)), atol=2e-2)
+    with pytest.raises(ValueError, match="signals"):
+        plan.execute(cube(8))
+
+
+def test_plan_pfft3_explicit_config_skips_tuner():
+    from repro.core.api import plan_pfft3
+    plan = plan_pfft3(8, config=PlanConfig(radix=2))
+    assert plan.tuning["source"] == "explicit"
+    m = cube(8)
+    np.testing.assert_allclose(np.asarray(plan.execute(m)),
+                               np.asarray(jnp.fft.fftn(m)), atol=2e-2)
+
+
+# ------------------------------------------------------------- pfft1_large
+
+@pytest.mark.parametrize("n", [64, 360, 97, 12])
+def test_pfft1_large_matches_fft(n):
+    # pow2, composite non-pow2, prime (degenerate n1=1), and small.
+    from repro.core.pfft_large import pfft1_large_apply
+    rng = np.random.default_rng(n)
+    x = (rng.standard_normal(n)
+         + 1j * rng.standard_normal(n)).astype(np.complex64)
+    np.testing.assert_allclose(np.asarray(pfft1_large_apply(jnp.asarray(x))),
+                               np.fft.fft(x), atol=2e-3)
+
+
+def test_four_step_factors():
+    from repro.core.pfft_large import four_step_factors
+    assert four_step_factors(360) == (18, 20)
+    assert four_step_factors(64) == (8, 8)
+    assert four_step_factors(97) == (1, 97)       # prime: degenerate
+    assert four_step_factors(360, n1=8) == (8, 45)
+    assert four_step_factors(360, n2=36) == (10, 36)
+    with pytest.raises(ValueError, match="divide"):
+        four_step_factors(360, n1=7)
+    with pytest.raises(ValueError, match="multiply"):
+        four_step_factors(360, n1=8, n2=44)
+
+
+def test_plan_pfft1_large_lifecycle(tmp_path):
+    from repro.core.api import plan_pfft1_large
+    wis = str(tmp_path / "wisdom.json")
+    p1 = plan_pfft1_large(360, tune="measure", wisdom=wis)
+    assert p1.tuning["source"] == "measure"
+    p2 = plan_pfft1_large(360, tune="measure", wisdom=wis)
+    assert p2.tuning["source"] == "wisdom"
+    assert "measured" not in p2.tuning          # zero re-measurement
+    rng = np.random.default_rng(3)
+    x = (rng.standard_normal(360)
+         + 1j * rng.standard_normal(360)).astype(np.complex64)
+    np.testing.assert_allclose(np.asarray(p2.execute(jnp.asarray(x))),
+                               np.fft.fft(x), atol=2e-3)
+
+
+# ------------------------------------------------------------- distributed
+
+SLAB_SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.pfft3d import pfft3_distributed
 mesh = jax.make_mesh((8,), ("fft",))
@@ -56,8 +197,56 @@ print("DIST3D_OK")
 """
 
 
-def test_pfft3_distributed_8_devices():
-    code = SCRIPT.format(src=os.path.abspath(SRC))
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=600)
-    assert "DIST3D_OK" in proc.stdout, proc.stderr[-2000:]
+def test_pfft3_slab_8_devices(dist_subprocess):
+    dist_subprocess(SLAB_SCRIPT, devices=8, sentinel="DIST3D_OK")
+
+
+PENCIL_SCRIPT = r"""
+import tempfile, os
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.api import plan_pfft3
+from repro.launch.mesh import make_pfft3_mesh
+
+mesh = make_pfft3_mesh(4, 2)
+rng = np.random.default_rng(1)
+m = jnp.asarray((rng.standard_normal((16,16,16))
+                 + 1j*rng.standard_normal((16,16,16))).astype(np.complex64))
+wis = os.path.join(tempfile.mkdtemp(), "wisdom.json")
+
+# Acceptance 1: a measured pencil plan on the 2-D mesh matches fftn.
+p1 = plan_pfft3(16, mesh=mesh, tune="measure", wisdom=wis)
+assert p1.tuning["source"] == "measure", p1.tuning["source"]
+err = float(jnp.max(jnp.abs(p1.execute(m) - jnp.fft.fftn(m))))
+assert err < 2e-2, err
+
+# Acceptance 2: the second plan is served from the v3 topo-keyed wisdom
+# store with zero re-measurement, executes identically, and replays the
+# tuned orientation.
+p2 = plan_pfft3(16, mesh=mesh, tune="measure", wisdom=wis)
+assert p2.tuning["source"] == "wisdom", p2.tuning["source"]
+assert "measured" not in p2.tuning
+assert p2.axis_names == p1.axis_names, (p2.axis_names, p1.axis_names)
+err2 = float(jnp.max(jnp.abs(p2.execute(m) - jnp.fft.fftn(m))))
+assert err2 < 2e-2, err2
+assert "|topo=" in p1.tuning["wisdom_key"]
+assert "+" in p1.tuning["topology"]   # 2-D digest form
+
+# Acceptance 3: a different mesh shape digests differently and re-tunes.
+mesh_t = make_pfft3_mesh(2, 4)
+p3 = plan_pfft3(16, mesh=mesh_t, tune="estimate", wisdom=wis)
+assert p3.tuning["topology"] != p1.tuning["topology"]
+assert p3.tuning["source"] == "estimate", p3.tuning["source"]
+
+# The shared divisibility message, from the pencil path.
+try:
+    plan_pfft3(10, mesh=mesh)
+except ValueError as e:
+    assert "N=10 must be divisible by mesh axis fft_r=4" in str(e), e
+else:
+    raise AssertionError("divisibility check did not fire")
+print("PENCIL3D_OK")
+"""
+
+
+def test_plan_pfft3_pencil_8_devices(dist_subprocess):
+    dist_subprocess(PENCIL_SCRIPT, devices=8, sentinel="PENCIL3D_OK")

@@ -561,10 +561,16 @@ _KEY_NS = (16, 32, 48)
 # precision's plan served to another, would execute the wrong transform).
 _KEY_DTYPES = ("complex64", "complex128", "float32", "float64")
 _KEY_METHODS = ("lb", "fpm", "fpm-pad", "fpm-czt",
-                "rfft-lb", "rfft-fpm", "rfft-fpm-pad")
+                "rfft-lb", "rfft-fpm", "rfft-fpm-pad",
+                # The 3-D pencil family and the four-step huge-1-D method
+                # share the store with the 2-D vocabulary.
+                "pfft3-lb", "pfft1-large")
 _KEY_BACKENDS = ("cpu", "tpu")
 _KEY_DETAILS = (None, "cafe0123", "70a61b03")
-_KEY_TOPOS = (None, "2xfft.cpu.k1", "4xfft.cpu.k1-2-4", "4xrows.cpu.k1")
+# The 2-D-mesh digest ('+'-joined per-axis terms) must stay injective
+# against every 1-D digest and against its own transposed mesh.
+_KEY_TOPOS = (None, "2xfft.cpu.k1", "4xfft.cpu.k1-2-4", "4xrows.cpu.k1",
+              "4xfft_r+2xfft_c.cpu.k1-2", "2xfft_r+4xfft_c.cpu.k1-2")
 
 
 def _key_tuple_from_draws(n_i, dtype_i, p, method_i, backend_i, detail_i,
@@ -575,11 +581,11 @@ def _key_tuple_from_draws(n_i, dtype_i, p, method_i, backend_i, detail_i,
 
 
 @given(a_n=st.integers(0, 2), a_dtype=st.integers(0, 3), a_p=st.integers(1, 8),
-       a_method=st.integers(0, 6), a_backend=st.integers(0, 1),
-       a_detail=st.integers(0, 2), a_topo=st.integers(0, 3),
+       a_method=st.integers(0, 8), a_backend=st.integers(0, 1),
+       a_detail=st.integers(0, 2), a_topo=st.integers(0, 5),
        b_n=st.integers(0, 2), b_dtype=st.integers(0, 3), b_p=st.integers(1, 8),
-       b_method=st.integers(0, 6), b_backend=st.integers(0, 1),
-       b_detail=st.integers(0, 2), b_topo=st.integers(0, 3))
+       b_method=st.integers(0, 8), b_backend=st.integers(0, 1),
+       b_detail=st.integers(0, 2), b_topo=st.integers(0, 5))
 @settings(max_examples=150, deadline=None)
 def test_wisdom_keys_never_collide(a_n, a_dtype, a_p, a_method, a_backend,
                                    a_detail, a_topo, b_n, b_dtype, b_p,
