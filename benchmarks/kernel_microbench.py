@@ -56,6 +56,19 @@ acceptance checks assert on):
                (orientation included) warms the same v3 2-D-topology key
                ``plan_pfft3(mesh=...)`` looks up.  A 1-device host
                records the estimate-fallback facts.
+  multihost    hierarchical-vs-flat exchange on an emulated hosts x local
+               host-major mesh (``make_fft_mesh(hosts=...)`` over the
+               forced CPU devices): ``tune_dist_config(mode="measure")``
+               races both exchange forms end to end, the record carries
+               the explicit hier-vs-flat delta, the per-tier comm
+               samples (one grouped all_to_all per tier), and — when a
+               wisdom store is being warmed — the two interconnect
+               tiers ``fit_cost_params`` recovers from those samples.
+               The winner lands under the host-count topology digest
+               (``2hx4x...``), so a warmed store serves later multi-host
+               plans with zero re-measurement (CI asserts it).  A
+               sub-4-device host records the structural two-tier
+               byte-accounting facts instead.
 
 Every record is labeled with the backend it was measured on and whether
 the Pallas kernels ran in interpret mode.  A ``--sweeps`` subset merges:
@@ -97,7 +110,8 @@ from repro.kernels.transpose.ops import transpose_op
 from repro.plan import (CostParams, PlanConfig, SegmentSchedule,
                         candidate_configs, dist_comm_bytes, dist_panel_space,
                         estimate_cost, estimate_grouped_cost,
-                        estimate_schedule_cost, grouped_dist_schedule,
+                        estimate_schedule_cost, exchange_time,
+                        grouped_dist_schedule,
                         measure_configs, measure_dist_configs,
                         partition_digest, record_wisdom, topology_digest,
                         tune_config, tune_dist_config, tune_schedule,
@@ -600,6 +614,132 @@ def bench_pfft3(sizes, wisdom_path: str | None = None) -> list[dict]:
     return recs
 
 
+def bench_multihost(sizes, wisdom_path: str | None = None) -> list[dict]:
+    """Hierarchical-vs-flat exchange race on an emulated hosts x local mesh.
+
+    ``make_fft_mesh(hosts=h, local=l)`` splits the forced CPU devices
+    into ``h`` host-major groups (the single-process stand-in for real
+    ``process_index`` structure), so ``tune_dist_config(mode="measure")``
+    races hierarchical-exchange candidates against flat ones through the
+    full ``pfft2_distributed`` pipeline.  The record pins three things:
+
+    * the *explicit* hier-vs-flat end-to-end delta (both forms of the
+      winner's config, interleaved through ``measure_dist_configs``);
+    * the per-tier comm samples the tuner times — one grouped
+      all_to_all per tier, byte volumes matching
+      ``dist_comm_bytes(hosts=..., exchange="hier")`` exactly;
+    * the two interconnect tiers ``fit_cost_params`` recovers from the
+      warmed store (fast intra-host vs slow inter-host constants) —
+      degenerate on a localhost rig where both tiers are shared memory,
+      but the fit *path* is the one real clusters calibrate through.
+
+    The measured winner warms wisdom under the host-count topology
+    digest (``{h}hx{p}x...``), the key ``plan_pfft(mesh=...)`` looks up
+    when handed the same emulated-host mesh — so a warmed store serves
+    the multi-host plan with zero re-measurement.  Sub-4-device hosts
+    record the structural two-tier byte split instead (flat keeps
+    ``M(l-1)/p`` on the fast tier, hier aggregates to ``M(l-1)/l`` fast
+    bytes but only ``h-1`` slow-tier messages).
+    """
+    import dataclasses
+
+    import jax
+    from repro.launch.mesh import make_fft_mesh, mesh_host_shape
+    from repro.plan import fit_cost_params
+
+    p = jax.device_count()
+    backend = jax.default_backend()
+    hosts = 2 if p >= 4 and p % 2 == 0 else 1
+    local = p // hosts
+    recs = []
+    if hosts < 2 or local < 2:
+        # Structural fallback: the tier byte accounting at a reference
+        # 2-host x 2-device topology, priced by the default constants.
+        params = CostParams.for_backend(backend)
+        for n in sizes:
+            flat = dist_comm_bytes(n, 4, hosts=2, exchange="flat")
+            hier = dist_comm_bytes(n, 4, hosts=2, exchange="hier")
+            total = dist_comm_bytes(n, 4)
+            recs.append({
+                "bench": "multihost", "n": int(n), "devices": p,
+                "hosts": 2, "local": 2, "measured": False,
+                "fallback": "needs >= 4 devices with an even split",
+                "flat_intra_bytes": float(flat.intra),
+                "flat_inter_bytes": float(flat.inter),
+                "hier_intra_bytes": float(hier.intra),
+                "hier_inter_bytes": float(hier.inter),
+                "inter_msgs_flat": 2, "inter_msgs_hier": 1,
+                "exchange_time_flat_s": exchange_time(
+                    total, 4, params=params, hosts=2, exchange="flat"),
+                "exchange_time_hier_s": exchange_time(
+                    total, 4, params=params, hosts=2, exchange="hier"),
+            })
+        return recs
+
+    mesh = make_fft_mesh(hosts=hosts, local=local)
+    assert mesh_host_shape(mesh, "fft") == (hosts, local)
+    for n in sizes:
+        if n % p:
+            continue
+        panels = dist_panel_space(n, p)
+        topo = topology_digest(mesh, "fft", panels=panels)
+        cfg, info = tune_dist_config(n, mesh, "fft", mode="measure",
+                                     panels=panels)
+        dist = info["dist"]
+        tiers = dist_comm_bytes(n, p, hosts=hosts, exchange=cfg.exchange)
+        measured = "measure_fallback" not in info
+        rec = {
+            "bench": "multihost", "n": int(n), "devices": p,
+            "hosts": hosts, "local": local,
+            "topology": topo,
+            "config": cfg.describe(),
+            "exchange": cfg.exchange,
+            "intra_bytes": float(tiers.intra),
+            "inter_bytes": float(tiers.inter),
+            "comm_time_est_s": dist["comm_time_est_s"],
+            "measured": measured,
+        }
+        if measured:
+            # Explicit hier-vs-flat: the same winning config under both
+            # exchange forms, interleaved through the tuner's harness.
+            flat_cfg = dataclasses.replace(cfg, exchange="flat")
+            hier_cfg = dataclasses.replace(cfg, exchange="hier")
+            times = measure_dist_configs([flat_cfg, hier_cfg], n, mesh,
+                                         "fft", rounds=3)
+            rec.update({
+                "time_s": info["time_s"],
+                "time_flat_s": float(times[flat_cfg]),
+                "time_hier_s": float(times[hier_cfg]),
+                "hier_vs_flat_delta_s": float(times[flat_cfg]
+                                              - times[hier_cfg]),
+                "comm_time_meas_s": dist.get("comm_time_meas_s"),
+                "comm_samples": dist.get("comm_samples"),
+            })
+        else:
+            rec["fallback"] = info["measure_fallback"]
+        recs.append(rec)
+        if wisdom_path and measured:
+            key = wisdom_key(n=n, dtype="complex64", p=p, method="lb",
+                             backend=backend, topology=topo)
+            extra = {"origin": "kernel_microbench", "topology": topo,
+                     "hosts": hosts,
+                     "comm_bytes": dist["comm_bytes"],
+                     "comm_time_s": dist.get("comm_time_meas_s")}
+            if dist.get("comm_samples"):
+                extra["comm_samples"] = dist["comm_samples"]
+            record_wisdom(wisdom_path, key, cfg, mode="measure",
+                          time_s=info["time_s"], extra=extra)
+    if wisdom_path and any(r.get("measured") for r in recs):
+        fitted = fit_cost_params(wisdom_path, backend=backend)
+        for r in recs:
+            if r.get("measured"):
+                r["fit_intra_bytes_per_s"] = fitted.interconnect_bytes_per_s
+                r["fit_intra_latency_s"] = fitted.comm_latency_s
+                r["fit_inter_bytes_per_s"] = fitted.inter_bytes_per_s
+                r["fit_inter_latency_s"] = fitted.inter_latency_s
+    return recs
+
+
 # Which record ``bench`` tags each sweep (re)writes — the unit of the
 # overwrite guard and of partial-sweep merging below.
 _SWEEP_BENCHES = {
@@ -607,6 +747,7 @@ _SWEEP_BENCHES = {
     "planner": ("planner",), "schedule": ("schedule",),
     "dist": ("dist",), "hetero-dist": ("hetero-dist",),
     "rfft": ("rfft", "rfft-dist"), "pfft3": ("pfft3",),
+    "multihost": ("multihost",),
 }
 
 
@@ -677,6 +818,8 @@ def run(quick: bool = False, out: str = DEFAULT_OUT,
                                    wisdom_path=wisdom),
         "pfft3": lambda: bench_pfft3([8] if quick else [8, 16],
                                      wisdom_path=wisdom),
+        "multihost": lambda: bench_multihost([64] if quick else [64, 128],
+                                             wisdom_path=wisdom),
     }
     chosen = (list(all_sweeps) if sweeps is None
               else [s.strip() for s in sweeps.split(",") if s.strip()])
@@ -722,7 +865,7 @@ def main() -> int:
     ap.add_argument("--sweeps", default=None,
                     help="comma-separated subset of "
                          "radix,fused,segments,planner,schedule,dist,"
-                         "hetero-dist,rfft,pfft3 (default: all)")
+                         "hetero-dist,rfft,pfft3,multihost (default: all)")
     ap.add_argument("--force", action="store_true",
                     help="overwrite an output file holding accelerator-"
                          "tagged records with interpret-mode timings")

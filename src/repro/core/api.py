@@ -379,6 +379,10 @@ def _resolve_schedule(n: int, method: Method, part: PartitionResult,
             if dist.get("comm_time_meas_s") is not None:
                 extra["comm_bytes"] = dist["comm_bytes"]
                 extra["comm_time_s"] = dist["comm_time_meas_s"]
+            if dist.get("comm_samples"):
+                extra["comm_samples"] = dist["comm_samples"]
+            if int(dist.get("hosts", 1)) > 1:
+                extra["hosts"] = int(dist["hosts"])
         record_wisdom(wisdom, key, schedule, mode="measure",
                       time_s=info.get("time_s"), extra=extra)
     return schedule, tuning
@@ -731,6 +735,8 @@ def plan_pfft3(n: int, *, p: int | None = None, mesh=None,
         if stats.get("comm_time_meas_s") is not None:
             extra["comm_bytes"] = stats["comm_bytes"]
             extra["comm_time_s"] = stats["comm_time_meas_s"]
+        if int(stats.get("hosts", 1)) > 1:
+            extra["hosts"] = int(stats["hosts"])
         record_wisdom(wisdom, key, cfg, mode="measure",
                       time_s=info.get("time_s"), extra=extra or None)
     return build(cfg, waxes if mesh is not None else None)

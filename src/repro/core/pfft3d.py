@@ -51,7 +51,7 @@ from repro.core.fpm import FPMSet
 from repro.core.partition import lb_partition, partition_rows
 from repro.core.pfft import _group_row_ffts
 from repro.core.pfft_dist import (_local_fft, default_dist_pad_len,
-                                  require_mesh_divisible,
+                                  hier_all_to_all, require_mesh_divisible,
                                   validate_spmd_schedule)
 from repro.plan.config import PlanConfig, normalize_pad
 from repro.plan.groups import DeviceGroupProgram, device_group_program
@@ -277,6 +277,17 @@ def pfft3_pencil(
                               split_axis=2, concat_axis=1, tiled=True)
     a2a_r = functools.partial(jax.lax.all_to_all, axis_name=ax_r,
                               split_axis=2, concat_axis=0, tiled=True)
+    if config.exchange == "hier":
+        # On a host-major pencil mesh only the r axis spans hosts (the
+        # c-axis communicators live inside one box — make_pfft3_mesh's
+        # layout), so only round 2 takes the hierarchical form; with no
+        # exploitable host shape it degrades to the flat round.
+        from repro.launch.mesh import mesh_host_shape
+        hosts_r, local_r = mesh_host_shape(mesh, ax_r)
+        if hosts_r > 1 and local_r > 1:
+            a2a_r = functools.partial(hier_all_to_all, axis_name=ax_r,
+                                      hosts=hosts_r, local=local_r,
+                                      split_axis=2, concat_axis=0)
 
     @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(ax_r, ax_c, None),),
@@ -327,6 +338,15 @@ def pfft3_slab(m: jnp.ndarray, mesh: Mesh, axis_name: str = "fft", *,
     fft3 = _pencil_rows_fft(n, padded=padded, pad_len=pad_len, config=cfg,
                             backend=backend, program=None, axis_names=None,
                             c=1)
+    rotate = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                               split_axis=2, concat_axis=0, tiled=True)
+    if cfg.exchange == "hier":
+        from repro.launch.mesh import mesh_host_shape
+        hosts, local = mesh_host_shape(mesh, axis_name)
+        if hosts > 1 and local > 1:
+            rotate = functools.partial(hier_all_to_all, axis_name=axis_name,
+                                       hosts=hosts, local=local,
+                                       split_axis=2, concat_axis=0)
 
     @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(axis_name, None, None),),
@@ -336,8 +356,7 @@ def pfft3_slab(m: jnp.ndarray, mesh: Mesh, axis_name: str = "fft", *,
             block = fft3(block)
             # distributed rotation: split the transformed axis, concat the
             # sharded plane axis, then rotate locally.
-            block = jax.lax.all_to_all(block, axis_name, split_axis=2,
-                                       concat_axis=0, tiled=True)  # (n, n, n/p)
+            block = rotate(block)                                  # (n, n, n/p)
             block = jnp.moveaxis(block, -1, 0)                     # (n/p, n, n)
         return block
 

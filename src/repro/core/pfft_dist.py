@@ -60,7 +60,7 @@ from repro.plan.groups import (DeviceGroupProgram, device_group_program,
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["pfft2_distributed", "rpfft2_distributed", "irpfft2_distributed",
-           "make_pfft2_fn", "ragged_row_layout",
+           "make_pfft2_fn", "ragged_row_layout", "hier_all_to_all",
            "validate_spmd_schedule", "default_dist_pad_len",
            "require_mesh_divisible"]
 
@@ -91,6 +91,78 @@ def require_mesh_divisible(n: int, p: int, axis_name: str) -> None:
     if int(p) > 0 and n % int(p):
         raise ValueError(
             f"N={n} must be divisible by mesh axis {axis_name}={int(p)}")
+
+
+def _hier_groups(hosts: int, local: int) -> tuple[list, list]:
+    """``axis_index_groups`` of the two hierarchical-exchange stages on a
+    host-major axis: intra groups are each host's contiguous run of
+    ``local`` positions, inter groups collect local rank ``L`` of every
+    host."""
+    intra = [[H * local + L for L in range(local)] for H in range(hosts)]
+    inter = [[H * local + L for H in range(hosts)] for L in range(local)]
+    return intra, inter
+
+
+def hier_all_to_all(x: jnp.ndarray, *, axis_name: str, hosts: int,
+                    local: int, split_axis: int,
+                    concat_axis: int) -> jnp.ndarray:
+    """Hierarchical tiled ``all_to_all`` over a host-major mesh axis —
+    bit-identical output to the flat collective, different traffic shape.
+
+    The flat tiled all_to_all sends one split-axis panel to each of the
+    ``p - 1`` peers, ``p - local`` of which cross the slow inter-host
+    tier.  This form runs two grouped stages instead: a local permutation
+    reorders the ``p = hosts * local`` panels host-major -> local-major,
+    an *intra-host* all_to_all (each host's contiguous group of ``local``
+    devices) aggregates, per device, the panels bound for local rank L of
+    every host, and an *inter-host* all_to_all (the ``local`` groups
+    collecting rank L across hosts) delivers them in ``hosts - 1``
+    slow-tier messages per device.  Panel algebra: after the grouped
+    stages the received blocks concatenate in (host, local) lexicographic
+    order — exactly the flat collective's peer order — and block (H, L)
+    is that sender's panel for this device, so the result matches the
+    flat exchange element for element (pinned by tests on the monolithic,
+    pipelined, fused-transposed, and pencil layouts).
+
+    Works for any (split_axis, concat_axis) pair with
+    ``x.shape[split_axis] % p == 0``; the fused path's transposed
+    exchange and the 3-D pencil rounds reuse it unchanged.
+    """
+    p = hosts * local
+    shape = x.shape
+    w = shape[split_axis] // p
+    xs = x.reshape(shape[:split_axis] + (hosts, local, w)
+                   + shape[split_axis + 1:])
+    xs = xs.swapaxes(split_axis, split_axis + 1)
+    x = xs.reshape(shape)
+    intra, inter = _hier_groups(hosts, local)
+    x = jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                           concat_axis=concat_axis, tiled=True,
+                           axis_index_groups=intra)
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True,
+                              axis_index_groups=inter)
+
+
+def _exchange_fns(axis_name: str, host_shape: tuple[int, int] | None):
+    """(a2a, a2a_t) for one phase: the flat collectives, or the
+    hierarchical pair when the phase runs on a host-major axis with a
+    non-degenerate (hosts > 1, local > 1) shape — degenerate hierarchies
+    are the flat program with extra steps."""
+    if host_shape is not None and host_shape[0] > 1 and host_shape[1] > 1:
+        hosts, local = host_shape
+        a2a = functools.partial(hier_all_to_all, axis_name=axis_name,
+                                hosts=hosts, local=local,
+                                split_axis=1, concat_axis=0)
+        a2a_t = functools.partial(hier_all_to_all, axis_name=axis_name,
+                                  hosts=hosts, local=local,
+                                  split_axis=0, concat_axis=1)
+        return a2a, a2a_t
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                            split_axis=1, concat_axis=0, tiled=True)
+    a2a_t = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                              split_axis=0, concat_axis=1, tiled=True)
+    return a2a, a2a_t
 
 
 def _local_fft(block: jnp.ndarray, n: int, *, padded: str | None,
@@ -174,7 +246,8 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
                  backend: str | None = None,
                  pipeline_panels: int = 1,
                  program: DeviceGroupProgram | None = None,
-                 axis_size: int | None = None) -> jnp.ndarray:
+                 axis_size: int | None = None,
+                 host_shape: tuple[int, int] | None = None) -> jnp.ndarray:
     """One (row FFT -> distributed transpose) phase on a local block.
 
     block: (n_loc, N) — this device's rows.  Returns (n_loc, N): this
@@ -206,17 +279,23 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     branch per distinct config — while the collective structure stays
     uniform; heterogeneous schedules never take the fused path (the
     grouped lowering rejects fused mixes eagerly).
+
+    ``host_shape`` (hosts, local) routes the exchange through the
+    hierarchical two-stage collective (``hier_all_to_all``) — same
+    output, but the slow inter-host tier carries ``hosts - 1`` aggregated
+    messages per device instead of one per remote peer; the panel
+    pipeline then overlaps those inter-host rounds against the next
+    panel's FFT exactly as it overlaps flat exchanges.  ``None`` (or a
+    degenerate shape) is the flat collective.
     """
     fused = config.fused and padded is None and program is None
+    a2a, a2a_t = _exchange_fns(axis_name, host_shape)
     if fused:
         # radix=2 means the pure-jnp Stockham elsewhere, not a kernel
         # radix: only an explicit radix-4 reaches the fused kernel.
         fused_radix = config.radix if config.radix == 4 else None
         fft_t = functools.partial(fft_rows_then_transpose,
                                   backend=backend, radix=fused_radix)
-        # Transposed blocks exchange with the axis roles swapped.
-        a2a_t = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
-                                  split_axis=0, concat_axis=1, tiled=True)
     if program is not None:
         fft = _grouped_local_fft(axis_name, n, padded=padded,
                                  pad_len=pad_len, program=program,
@@ -228,8 +307,6 @@ def _local_phase(block: jnp.ndarray, axis_name: str, n: int, *,
     fft = _faulted_fft(fft, axis_name, axis_size)
     if fused:
         fft_t = _faulted_fft(fft_t, axis_name, axis_size)
-    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
-                            split_axis=1, concat_axis=0, tiled=True)
     n_loc = block.shape[0]
     k = pipeline_panels
     if k > 1 and n_loc % k:
@@ -402,6 +479,12 @@ def _resolve_dist_config(n: int, mesh: Mesh, axis_name: str, *, pad: str,
         if dist.get("comm_time_meas_s") is not None:
             extra["comm_bytes"] = dist["comm_bytes"]
             extra["comm_time_s"] = dist["comm_time_meas_s"]
+        if dist.get("comm_samples"):
+            # Tier-tagged per-exchange samples (intra-/inter-host): what
+            # ``fit_cost_params`` fits the two comm tiers from.
+            extra["comm_samples"] = dist["comm_samples"]
+        if int(dist.get("hosts", 1)) > 1:
+            extra["hosts"] = int(dist["hosts"])
         record_wisdom(wisdom, key, cfg, mode="measure",
                       time_s=info["time_s"], extra=extra)
     return cfg, tuning
@@ -499,11 +582,21 @@ def pfft2_distributed(
         program = device_group_program(schedule, int(p), pad_len=pad_len)
         pad_len = program.pad_len  # the lowering owns the uniform length
 
+    host_shape = None
+    if config.exchange == "hier":
+        # Hierarchy comes from the mesh, not the config: on a mesh with
+        # no host-major structure the hier pick degrades to the flat
+        # program (mesh_host_shape returns (1, p)) rather than raising —
+        # a wisdom entry replayed onto a reshaped mesh stays correct.
+        from repro.launch.mesh import mesh_host_shape
+        host_shape = mesh_host_shape(mesh, axis_name)
+
     spec_rows = P(axis_name, None)
     phase = functools.partial(
         _local_phase, axis_name=axis_name, n=n, padded=padded,
         pad_len=pad_len, config=config, backend=backend,
-        pipeline_panels=panels, program=program, axis_size=int(p))
+        pipeline_panels=panels, program=program, axis_size=int(p),
+        host_shape=host_shape)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(spec_rows,), out_specs=spec_rows,
@@ -549,6 +642,11 @@ def _validate_real_dist(config: PlanConfig | None,
         raise ValueError(
             "the real distributed path is unfused and monolithic "
             f"(fused/panels are complex-path features), got {config.describe()}")
+    if config.exchange != "flat":
+        raise ValueError(
+            "the real distributed path exchanges padded half-spectrum "
+            "panels over the flat collective only (hier is a complex-path "
+            f"feature for now), got {config.describe()}")
     return config
 
 

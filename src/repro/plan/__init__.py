@@ -24,10 +24,12 @@ from repro.plan.groups import (DeviceGroupProgram, device_group_program,
                                spmd_program_config)
 from repro.plan.pads import (czt_fft_lengths, fpm_pad_lengths,
                              rfft_pad_lengths)
-from repro.plan.cost import (CostParams, dist_comm_bytes, estimate_cost,
+from repro.plan.cost import (CommTiers, CostParams, comm_phase_time,
+                             dist_comm_bytes, dist_comm_time, estimate_cost,
                              estimate_grouped_cost, estimate_pfft3_cost,
-                             estimate_schedule_cost, halfspec_cols,
-                             pfft3_comm_bytes, phase_dispatch_count)
+                             estimate_schedule_cost, exchange_time,
+                             halfspec_cols, pfft3_comm_bytes,
+                             phase_dispatch_count)
 from repro.plan.wisdom import (WISDOM_VERSION, load_wisdom, lookup_wisdom,
                                partition_digest, record_wisdom,
                                topology_digest, wisdom_key)
@@ -48,10 +50,11 @@ __all__ = [
     "SegmentPlan", "SegmentSchedule",
     "DeviceGroupProgram", "device_group_program", "spmd_program_config",
     "czt_fft_lengths", "fpm_pad_lengths", "rfft_pad_lengths",
-    "CostParams", "dist_comm_bytes", "estimate_cost",
+    "CommTiers", "CostParams", "comm_phase_time", "dist_comm_bytes",
+    "dist_comm_time", "estimate_cost",
     "estimate_grouped_cost", "estimate_pfft3_cost",
-    "estimate_schedule_cost", "halfspec_cols", "pfft3_comm_bytes",
-    "phase_dispatch_count",
+    "estimate_schedule_cost", "exchange_time", "halfspec_cols",
+    "pfft3_comm_bytes", "phase_dispatch_count",
     "WISDOM_VERSION", "load_wisdom", "lookup_wisdom", "partition_digest",
     "record_wisdom", "topology_digest", "wisdom_key",
     "candidate_configs", "dist_panel_space", "grouped_dist_schedule",

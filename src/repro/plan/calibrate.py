@@ -30,15 +30,20 @@ entries, or when the fit degenerates (a factor column absent or a
 non-positive solution), the hard-coded constants are kept
 component-wise — calibration refines, never breaks.
 
-Distributed (``topo=``) entries additionally carry a measured comm
-sample (``comm_bytes`` + ``comm_time_s``, recorded by
-``tune_dist_config``); from two or more such samples the interconnect
-constants are fit as the line
+Distributed (``topo=``) entries additionally carry measured comm
+samples; the interconnect constants are fit per *tier* as the line
 
-    comm_time/2 = comm_latency_s + comm_bytes · (1/BW_interconnect)
+    time = msgs · latency + bytes · (1/BW)
 
-(two all_to_all phases per transform).  One sample pins the bandwidth
-alone (latency kept at the default); zero keeps both defaults.
+Legacy end-to-end samples (``comm_bytes`` + ``comm_time_s``, two
+all_to_all phases per transform, so ``time = comm_time/2, msgs = 1``)
+feed the intra tier — on a single-host axis the whole exchange rides
+the legacy = intra-tier constants.  Tier-tagged ``comm_samples`` from
+multi-host tuning runs feed their own tier, fitting
+``inter_bytes_per_s``/``inter_latency_s`` separately (the two-tier comm
+model of DESIGN.md §Multi-host topology).  Per tier: two or more
+samples with distinct byte counts fit both constants, one pins the
+bandwidth alone, zero keeps the defaults.
 
 File-path fits are cached per (path, mtime): ``plan_pfft(wisdom=...)``
 calibrates on every tuned call, and re-running lstsq over an unchanged
@@ -100,37 +105,21 @@ def _factor_feature(rows: int, length: int, cfg: PlanConfig,
     return name, float(fft_flops(rows, length)) / nominal_flops * scale
 
 
-def _fit_comm_params(entries: dict, backend: str,
-                     params: CostParams) -> CostParams:
-    """Fold measured comm samples into ``params``'s interconnect constants.
-
-    Samples are distributed wisdom entries (``topo=`` keys) carrying the
-    ``comm_bytes``/``comm_time_s`` extras ``tune_dist_config`` records.
-    ``comm_time_s`` covers both phases, so the fitted line is
-    ``comm_time/2 = latency + bytes/BW``; >= 2 samples with distinct byte
-    counts fit both constants, exactly 1 fits the bandwidth with the
-    default latency, non-positive solutions keep the defaults
-    component-wise.
+def _fit_tier(samples: list, latency: float, bw: float
+              ) -> tuple[float, float]:
+    """Fit one comm tier's ``(latency_s, bytes_per_s)`` from per-launch
+    samples ``(bytes, seconds, msgs)``: the line ``t = msgs·lat + b/BW``
+    (``msgs`` is the launch's slow-tier message count — 1 for an
+    intra-tier or legacy flat launch, ``hosts − 1`` for the inter stage
+    of a hierarchical exchange).  >= 2 samples with distinct byte counts
+    fit both constants, exactly 1 fits the bandwidth with the default
+    latency, non-positive solutions keep the defaults component-wise.
     """
-    samples = []
-    for key, entry in entries.items():
-        if not isinstance(entry, dict) or "|topo=" not in key:
-            continue
-        if _parse_key(key).get("backend") != backend:
-            continue
-        try:
-            bytes_, t = float(entry["comm_bytes"]), float(entry["comm_time_s"])
-        except (KeyError, TypeError, ValueError):
-            continue
-        if bytes_ > 0 and t > 0:
-            samples.append((bytes_, t / 2.0))
     if not samples:
-        return params
-    latency = params.comm_latency_s
-    bw = params.interconnect_bytes_per_s
-    if len({b for b, _ in samples}) >= 2:
-        A = np.array([[1.0, b] for b, _ in samples])
-        y = np.array([t for _, t in samples])
+        return latency, bw
+    if len({b for b, _, _ in samples}) >= 2:
+        A = np.array([[m, b] for b, _, m in samples])
+        y = np.array([t for _, t, _ in samples])
         try:
             x, *_ = np.linalg.lstsq(A, y, rcond=None)
         except np.linalg.LinAlgError:
@@ -141,11 +130,61 @@ def _fit_comm_params(entries: dict, backend: str,
             if x[1] > 0:
                 bw = 1.0 / float(x[1])
     else:
-        b0, t0 = samples[0]
-        if t0 > latency:
-            bw = b0 / (t0 - latency)
+        b0, t0, m0 = samples[0]
+        if t0 > m0 * latency:
+            bw = b0 / (t0 - m0 * latency)
+    return latency, bw
+
+
+def _fit_comm_params(entries: dict, backend: str,
+                     params: CostParams) -> CostParams:
+    """Fold measured comm samples into ``params``'s interconnect constants.
+
+    Samples are distributed wisdom entries (``topo=`` keys) carrying the
+    extras ``tune_dist_config`` records, in two forms fit as two tiers
+    (``_fit_tier``):
+
+    * ``comm_bytes``/``comm_time_s`` — the legacy end-to-end sample;
+      ``comm_time_s`` covers both phases, so it contributes
+      ``(bytes, time/2, 1)`` to the *intra* tier (on a single-host axis
+      the whole exchange rides the legacy = intra-tier constants);
+    * ``comm_samples`` — tier-tagged per-launch samples from the grouped
+      tier microbench (``_measure_tier_exchange``), each
+      ``{tier, bytes, time_s, msgs}`` already per-exchange (no halving);
+      the ``inter`` ones are what make ``inter_bytes_per_s`` /
+      ``inter_latency_s`` fittable at all.
+    """
+    tiers: dict[str, list] = {"intra": [], "inter": []}
+    for key, entry in entries.items():
+        if not isinstance(entry, dict) or "|topo=" not in key:
+            continue
+        if _parse_key(key).get("backend") != backend:
+            continue
+        try:
+            bytes_, t = float(entry["comm_bytes"]), float(entry["comm_time_s"])
+            if bytes_ > 0 and t > 0:
+                tiers["intra"].append((bytes_, t / 2.0, 1))
+        except (KeyError, TypeError, ValueError):
+            pass
+        for s in entry.get("comm_samples") or []:
+            try:
+                tier = s["tier"]
+                bytes_, t = float(s["bytes"]), float(s["time_s"])
+                msgs = int(s.get("msgs", 1))
+            except (KeyError, TypeError, ValueError):
+                continue
+            if tier in tiers and bytes_ > 0 and t > 0 and msgs > 0:
+                tiers[tier].append((bytes_, t, msgs))
+    if not tiers["intra"] and not tiers["inter"]:
+        return params
+    latency, bw = _fit_tier(tiers["intra"], params.comm_latency_s,
+                            params.interconnect_bytes_per_s)
+    inter_lat, inter_bw = _fit_tier(tiers["inter"], params.inter_latency_s,
+                                    params.inter_bytes_per_s)
     return dataclasses.replace(params, comm_latency_s=latency,
-                               interconnect_bytes_per_s=bw)
+                               interconnect_bytes_per_s=bw,
+                               inter_latency_s=inter_lat,
+                               inter_bytes_per_s=inter_bw)
 
 
 def fit_cost_params(store: str | dict, *, backend: str | None = None,

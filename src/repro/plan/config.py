@@ -22,6 +22,14 @@ hashable value the planner can enumerate, price, measure, and persist:
   on ``N//2+1`` spectral columns, and the distributed transpose moves
   ~half the bytes.  Incompatible with ``pad="czt"`` — Bluestein has no
   half-spectrum form here.
+* ``exchange`` names the distributed-transpose collective layout:
+  ``"flat"`` is one ``all_to_all`` over the whole mesh axis; ``"hier"``
+  is the hierarchical two-stage form on host-major meshes — a local
+  pre-permutation plus an intra-host shuffle on the fast tier, then a
+  coarser inter-host exchange that aggregates each host's traffic into
+  ``hosts - 1`` slow-tier messages instead of ``p - local`` (see
+  DESIGN.md §Multi-host topology).  On meshes without host structure
+  ``"hier"`` degrades to the flat program.
 
 The dataclass is frozen so configs can key dicts and be deduplicated; the
 dict round-trip (``to_dict``/``from_dict``) is the wisdom wire format.
@@ -36,6 +44,7 @@ PadStrategy = Literal["none", "fpm", "czt"]
 
 _VALID_RADIX = (None, 2, 4)
 _VALID_PAD = ("none", "fpm", "czt")
+_VALID_EXCHANGE = ("flat", "hier")
 
 __all__ = ["PlanConfig", "PadStrategy", "normalize_pad"]
 
@@ -48,12 +57,16 @@ class PlanConfig:
     pad: str = "none"
     pipeline_panels: int = 1
     real: bool = False
+    exchange: str = "flat"
 
     def __post_init__(self) -> None:
         if self.radix not in _VALID_RADIX:
             raise ValueError(f"radix must be one of {_VALID_RADIX}, got {self.radix!r}")
         if self.pad not in _VALID_PAD:
             raise ValueError(f"pad must be one of {_VALID_PAD}, got {self.pad!r}")
+        if self.exchange not in _VALID_EXCHANGE:
+            raise ValueError(
+                f"exchange must be one of {_VALID_EXCHANGE}, got {self.exchange!r}")
         if self.pipeline_panels < 1:
             raise ValueError(f"pipeline_panels must be >= 1, got {self.pipeline_panels}")
         if self.fused and self.pad != "none":
@@ -125,6 +138,8 @@ class PlanConfig:
             parts.append(f"panels={self.pipeline_panels}")
         if self.real:
             parts.append("real")
+        if self.exchange != "flat":
+            parts.append(f"exch={self.exchange}")
         return ",".join(parts)
 
 

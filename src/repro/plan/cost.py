@@ -26,7 +26,7 @@ are wrong.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, NamedTuple
 
 import numpy as np
 
@@ -34,10 +34,10 @@ from repro.core.fpm import FPMSet, fft_flops
 from repro.plan.config import PlanConfig
 from repro.plan.schedule import SegmentSchedule
 
-__all__ = ["CostParams", "dist_comm_bytes", "estimate_cost",
-           "estimate_grouped_cost", "estimate_schedule_cost",
-           "estimate_pfft3_cost", "halfspec_cols", "phase_dispatch_count",
-           "pfft3_comm_bytes"]
+__all__ = ["CommTiers", "CostParams", "comm_phase_time", "dist_comm_bytes",
+           "dist_comm_time", "estimate_cost", "estimate_grouped_cost",
+           "estimate_schedule_cost", "estimate_pfft3_cost", "exchange_time",
+           "halfspec_cols", "phase_dispatch_count", "pfft3_comm_bytes"]
 
 _COMPLEX64_BYTES = 8
 # Bluestein computes one N-point DFT as ~3 length-m FFTs (forward, kernel
@@ -64,8 +64,15 @@ class CostParams:
     backend_factor: Mapping[str, float]  # compute multiplier per fft backend
     fused_factor: float             # multiplier for the fused kernel's compute
     panel_overlap: float = 0.6      # fraction of comm hidden per extra panel
-    interconnect_bytes_per_s: float = 2e10  # all_to_all cross-device bandwidth
-    comm_latency_s: float = 0.0     # fixed per-phase collective launch cost
+    # Two-tier interconnect: the legacy names price the *intra-host* tier
+    # (device-to-device inside one box — the only tier that exists on a
+    # single-host mesh, so every pre-multi-host call site keeps its
+    # meaning); the ``inter_*`` pair prices the slower host-to-host tier
+    # the hierarchical exchange aggregates traffic onto.
+    interconnect_bytes_per_s: float = 2e10  # intra-host all_to_all bandwidth
+    comm_latency_s: float = 0.0     # intra-host per-collective launch cost
+    inter_bytes_per_s: float = 2.5e9   # inter-host (network) bandwidth
+    inter_latency_s: float = 2e-5      # inter-host per-message latency
 
     @classmethod
     def for_backend(cls, backend: str | None = None) -> "CostParams":
@@ -77,7 +84,9 @@ class CostParams:
             # pure-jnp Stockham is an unrolled stage loop vs pocketfft.
             # Forced-host "devices" exchange through shared memory, so the
             # interconnect is loopback bandwidth plus a collective-launch
-            # latency of XLA's CPU all_to_all.
+            # latency of XLA's CPU all_to_all; the inter tier models the
+            # gloo/TCP hop of multi-process launches (loopback sockets in
+            # the emulation rig, NICs on a real cluster).
             return cls(
                 nominal_flops=2e9,
                 dispatch_overhead_s=5e-5,
@@ -87,10 +96,14 @@ class CostParams:
                 panel_overlap=0.0,
                 interconnect_bytes_per_s=1e10,
                 comm_latency_s=5e-5,
+                inter_bytes_per_s=2e9,
+                inter_latency_s=2e-4,
             )
         # Accelerator defaults (v5e-class): the radix-4 kernel beats the
         # library FFT (half the passes, twiddles from iota), fused wins by
-        # skipping the HBM round trip; ICI all_to_all runs near link rate.
+        # skipping the HBM round trip; ICI all_to_all runs near link rate
+        # and DCN (the inter-host tier) at roughly a quarter of it with
+        # much higher per-message latency.
         return cls(
             nominal_flops=2e11,
             dispatch_overhead_s=3e-6,
@@ -100,6 +113,8 @@ class CostParams:
             panel_overlap=0.6,
             interconnect_bytes_per_s=9e10,
             comm_latency_s=1e-6,
+            inter_bytes_per_s=2.5e10,
+            inter_latency_s=1e-5,
         )
 
 
@@ -116,8 +131,35 @@ def halfspec_cols(n: int, p: int = 1) -> int:
     return -(-nh // p) * p
 
 
+class CommTiers(NamedTuple):
+    """Per-tier byte volume of one exchange round (see ``dist_comm_bytes``)."""
+
+    intra: float  # bytes crossing the fast intra-host tier
+    inter: float  # bytes crossing the slow inter-host tier
+
+    @property
+    def total(self) -> float:
+        return self.intra + self.inter
+
+
+def comm_phase_time(bytes_: float, bytes_per_s: float,
+                    latency_s: float) -> float:
+    """Seconds of one comm phase: ``bytes/bandwidth + latency``, with the
+    launch latency charged only when bytes actually move.
+
+    The single home of the guarded form — a degenerate phase (1-wide
+    axis, empty tier) costs nothing, it never issues a collective.  Both
+    distributed tuners and both estimate models price phases through
+    this, so the guard can never drift between them again.
+    """
+    if not bytes_:
+        return 0.0
+    return float(bytes_) / bytes_per_s + latency_s
+
+
 def dist_comm_bytes(n: int, p: int, *, itemsize: int = _COMPLEX64_BYTES,
-                    real: bool = False) -> float:
+                    real: bool = False, hosts: int | None = None,
+                    exchange: str = "flat") -> float | CommTiers:
     """Cross-device bytes of one phase's ``all_to_all`` over ``p`` devices.
 
     Each device holds an (N/p, N) block and keeps its own diagonal tile,
@@ -126,11 +168,81 @@ def dist_comm_bytes(n: int, p: int, *, itemsize: int = _COMPLEX64_BYTES,
     ``real=True`` prices the half-spectrum panel: ``halfspec_cols(n, p)``
     columns instead of ``n`` — the ~2x comm saving the rfft2 pipeline is
     for.
+
+    ``hosts=None`` (every pre-multi-host call site) returns the legacy
+    flat total as a float.  ``hosts=h`` returns the per-tier ``CommTiers``
+    breakdown on an ``h``-host host-major axis (``l = p/h`` devices per
+    host), for ``exchange`` = ``"flat"`` or ``"hier"``:
+
+    * flat — of the ``M(p-1)/p`` exchanged bytes (M = whole-matrix
+      bytes), the fraction with a same-host peer stays on the fast tier:
+      intra ``M(l-1)/p``, inter ``M(p-l)/p``.
+    * hier — the intra-host stage is a full-width all_to_all within each
+      host, ``M(l-1)/l`` (more fast-tier volume: that is the aggregation
+      cost), and the inter stage still moves ``M(h-1)/h = M(p-l)/p``; the
+      win is slow-tier *message count*, priced in ``exchange_time``.
     """
     if p <= 1:
-        return 0.0
+        return 0.0 if hosts is None else CommTiers(0.0, 0.0)
     cols = halfspec_cols(n, p) if real else n
-    return float(n) * float(cols) * itemsize * (p - 1) / p
+    matrix = float(n) * float(cols) * itemsize
+    total = matrix * (p - 1) / p
+    if hosts is None:
+        return total
+    h = max(int(hosts), 1)
+    if h <= 1 or p % h:
+        return CommTiers(total, 0.0)
+    l = p // h
+    inter = matrix * (p - l) / p
+    if exchange == "hier" and l > 1:
+        return CommTiers(matrix * (l - 1) / l, inter)
+    return CommTiers(matrix * (l - 1) / p, inter)
+
+
+def exchange_time(total_bytes: float, p: int, *, params: "CostParams",
+                  hosts: int = 1, exchange: str = "flat") -> float:
+    """Seconds of one exchange round whose flat total volume is
+    ``total_bytes`` over a ``p``-wide host-major axis.
+
+    Single-host (or non-host-major) axes reduce to the legacy one-tier
+    ``comm_phase_time``.  With ``hosts=h`` the volume splits across tiers
+    per ``dist_comm_bytes`` and the slow tier pays a *per-message*
+    latency: a flat all_to_all sends ``p - l`` inter-host messages per
+    device, the hierarchical form aggregates them into ``h - 1`` — the
+    latency saving that can buy back hier's extra intra-host volume.
+    """
+    if total_bytes <= 0 or p <= 1:
+        return 0.0
+    h = max(int(hosts), 1)
+    if h <= 1 or p % h:
+        return comm_phase_time(total_bytes, params.interconnect_bytes_per_s,
+                               params.comm_latency_s)
+    l = p // h
+    matrix = float(total_bytes) * p / (p - 1)
+    if exchange == "hier" and l > 1:
+        intra, inter = matrix * (l - 1) / l, matrix * (p - l) / p
+        inter_msgs = h - 1
+    else:
+        intra, inter = matrix * (l - 1) / p, matrix * (p - l) / p
+        inter_msgs = p - l
+    t = comm_phase_time(intra, params.interconnect_bytes_per_s,
+                        params.comm_latency_s)
+    if inter:
+        t += inter / params.inter_bytes_per_s \
+            + inter_msgs * params.inter_latency_s
+    return t
+
+
+def dist_comm_time(n: int, p: int, *, params: "CostParams", hosts: int = 1,
+                   exchange: str = "flat",
+                   itemsize: int = _COMPLEX64_BYTES,
+                   real: bool = False) -> float:
+    """Seconds of one 2-D phase's distributed transpose under the
+    two-tier model (``dist_comm_bytes`` volume through
+    ``exchange_time``)."""
+    total = dist_comm_bytes(n, p, itemsize=itemsize, real=real)
+    return exchange_time(total, p, params=params, hosts=hosts,
+                         exchange=exchange)
 
 
 def pfft3_comm_bytes(n: int, q: int, *,
@@ -154,7 +266,8 @@ def pfft3_comm_bytes(n: int, q: int, *,
 def estimate_pfft3_cost(config: PlanConfig, *, n: int, r: int = 1,
                         c: int = 1, params: CostParams | None = None,
                         pad_len: int | None = None,
-                        itemsize: int = _COMPLEX64_BYTES) -> float:
+                        itemsize: int = _COMPLEX64_BYTES,
+                        hosts: int = 1) -> float:
     """Predicted seconds of the pencil-parallel 3-D PFFT under ``config``.
 
     Three local passes — each device transforms its ``N^2/(r*c)`` pencil
@@ -163,8 +276,11 @@ def estimate_pfft3_cost(config: PlanConfig, *, n: int, r: int = 1,
     priced exchange rounds: ``pfft3_comm_bytes`` over the ``c`` axis then
     the ``r`` axis, each overlapped by the panel factor exactly like the
     2-D model's comm term.  ``r = c = 1`` prices the single-host
-    transform (no comm).  Like the rest of the model, *ranking* is the
-    point, not absolute seconds.
+    transform (no comm).  On a host-major pencil mesh (``hosts > 1``) the
+    ``r`` axis is the one spanning hosts — its round goes through the
+    two-tier ``exchange_time`` under ``config.exchange``, while ``c``-axis
+    communicators live inside one host and stay on the fast tier.  Like
+    the rest of the model, *ranking* is the point, not absolute seconds.
     """
     if params is None:
         params = CostParams.for_backend()
@@ -177,14 +293,13 @@ def estimate_pfft3_cost(config: PlanConfig, *, n: int, r: int = 1,
     k = config.pipeline_panels
     phase = compute + traffic + k * params.dispatch_overhead_s
     comm = 0.0
-    for q_ax in (int(c), int(r)):
+    for q_ax, ax_hosts in ((int(c), 1), (int(r), max(int(hosts), 1))):
         bytes_ax = pfft3_comm_bytes(n, q_ax, itemsize=itemsize)
-        if bytes_ax:
-            t = bytes_ax / params.interconnect_bytes_per_s \
-                + params.comm_latency_s
-            if k > 1:
-                t *= 1.0 - params.panel_overlap * (k - 1) / k
-            comm += t
+        t = exchange_time(bytes_ax, q_ax, params=params, hosts=ax_hosts,
+                          exchange=config.exchange)
+        if t and k > 1:
+            t *= 1.0 - params.panel_overlap * (k - 1) / k
+        comm += t
     return 3.0 * phase + comm
 
 
@@ -255,7 +370,8 @@ def _compute_multiplier(config: PlanConfig, length: int,
 def estimate_cost(config: PlanConfig, *, n: int, d=None, pad_lengths=None,
                   fpms: FPMSet | None = None,
                   params: CostParams | None = None,
-                  comm_bytes: float = 0.0, batch: int = 1) -> float:
+                  comm_bytes: float = 0.0, batch: int = 1,
+                  comm_time_s: float | None = None) -> float:
     """Predicted seconds for a full 2-D PFFT (two limb phases) under ``config``.
 
     ``d``/``pad_lengths`` describe the partition (None: single whole-matrix
@@ -271,13 +387,15 @@ def estimate_cost(config: PlanConfig, *, n: int, d=None, pad_lengths=None,
     schedule = SegmentSchedule.homogeneous(
         config, n, d, pad_lengths if d is not None else None)
     return estimate_schedule_cost(schedule, fpms=fpms, params=params,
-                                  comm_bytes=comm_bytes, batch=batch)
+                                  comm_bytes=comm_bytes, batch=batch,
+                                  comm_time_s=comm_time_s)
 
 
 def estimate_schedule_cost(schedule: SegmentSchedule, *,
                            fpms: FPMSet | None = None,
                            params: CostParams | None = None,
-                           comm_bytes: float = 0.0, batch: int = 1) -> float:
+                           comm_bytes: float = 0.0, batch: int = 1,
+                           comm_time_s: float | None = None) -> float:
     """Predicted seconds for a full 2-D PFFT under a (possibly
     heterogeneous) schedule: two limb phases, each costing
 
@@ -335,12 +453,17 @@ def estimate_schedule_cost(schedule: SegmentSchedule, *,
 
     k = max(e.config.pipeline_panels for e in schedule.entries)
     comm = 0.0
-    if comm_bytes:
+    if comm_time_s is not None:
+        # Tier-aware override: the caller already priced this phase's
+        # exchange (``exchange_time`` on a host-major mesh) at batch=1.
+        comm = float(comm_time_s) if comm_bytes else 0.0
+    elif comm_bytes:
         # The all_to_all crosses the interconnect, not HBM; the fixed
         # collective-launch latency is paid once per phase (panels reuse
         # the issued collective stream).
-        comm = batch * comm_bytes / params.interconnect_bytes_per_s \
-            + params.comm_latency_s
+        comm = comm_phase_time(batch * comm_bytes,
+                               params.interconnect_bytes_per_s,
+                               params.comm_latency_s)
     if k > 1:
         comm *= 1.0 - params.panel_overlap * (k - 1) / k
         phase += (k - 1) * params.dispatch_overhead_s

@@ -34,7 +34,10 @@ SPMD error):
   *transposed* blocks with swapped ``all_to_all`` axes, so a fused and
   an unfused device would disagree on the collective's layout;
 * mixed ``pipeline_panels`` — the panel count is the number of
-  collectives a phase issues, which SPMD requires to match everywhere.
+  collectives a phase issues, which SPMD requires to match everywhere;
+* mixed ``exchange`` — flat and hierarchical transposes issue different
+  collectives (one axis-wide all_to_all vs two grouped stages), and a
+  device cannot be on one side of a collective its peer never issues.
 """
 
 from __future__ import annotations
@@ -62,16 +65,17 @@ def spmd_program_config(schedule: SegmentSchedule) -> PlanConfig:
     configs = schedule.configs
     if len(configs) == 1:
         return configs[0]
-    knobs = {(c.pad, c.fused, c.pipeline_panels) for c in configs}
+    knobs = {(c.pad, c.fused, c.pipeline_panels, c.exchange) for c in configs}
     if len(knobs) > 1 or any(c.fused for c in configs):
         raise ValueError(
             "pfft2_distributed runs one SPMD program per device; the "
             f"heterogeneous schedule [{schedule.describe()}] mixes "
-            "program-level knobs (pad / fused / pipeline_panels shape the "
-            "collective structure, which SPMD requires to match on every "
-            "device) and cannot be lowered to shard_map — only the local "
-            "row-FFT variant (radix/backend) may differ per device group; "
-            "use the single-host executor (repro.core.pfft) for the rest")
+            "program-level knobs (pad / fused / pipeline_panels / exchange "
+            "shape the collective structure, which SPMD requires to match "
+            "on every device) and cannot be lowered to shard_map — only the "
+            "local row-FFT variant (radix/backend) may differ per device "
+            "group; use the single-host executor (repro.core.pfft) for the "
+            "rest")
     return schedule.anchor_config
 
 

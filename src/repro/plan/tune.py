@@ -27,9 +27,10 @@ import numpy as np
 from repro.core.fpm import FPMSet
 from repro.plan.config import PlanConfig
 from repro.plan.cost import (CostParams, _compute_multiplier, _segment_work,
-                             dist_comm_bytes, estimate_cost,
-                             estimate_grouped_cost, estimate_pfft3_cost,
-                             estimate_schedule_cost, pfft3_comm_bytes)
+                             comm_phase_time, dist_comm_bytes, dist_comm_time,
+                             estimate_cost, estimate_grouped_cost,
+                             estimate_pfft3_cost, estimate_schedule_cost,
+                             exchange_time, pfft3_comm_bytes)
 from repro.plan.schedule import SegmentSchedule
 
 __all__ = ["candidate_configs", "segment_candidate_configs",
@@ -202,9 +203,10 @@ def _behavior_key(cfg: PlanConfig, n: int, d, pad_lengths) -> tuple:
     """
     lengths = sorted({length for _, length in _segment_work(n, d, pad_lengths)})
     if cfg.fused:
-        return ("fused", cfg.real, tuple(lengths))
+        return ("fused", cfg.real, cfg.exchange, tuple(lengths))
     per_len = [(length,) + _length_backend(cfg, length) for length in lengths]
-    return (cfg.batched, cfg.pipeline_panels, cfg.real, tuple(per_len))
+    return (cfg.batched, cfg.pipeline_panels, cfg.real, cfg.exchange,
+            tuple(per_len))
 
 
 def tune_config(n: int, *, d=None, pad_lengths=None, fpms: FPMSet | None = None,
@@ -480,6 +482,43 @@ def _measure_local_phase(cfg: PlanConfig, n: int, p: int, pad_len: int,
     return min(_timed_min([(cfg, fn)], x, rounds).values())
 
 
+def _measure_tier_exchange(mesh, axis_name: str, n: int, hosts: int,
+                           local: int, tier: str, dtype,
+                           rounds: int) -> float:
+    """Seconds of ONE grouped ``all_to_all`` over only ``tier``'s groups.
+
+    Times exactly one stage of the hierarchical exchange on the caller's
+    mesh — intra-host groups (the fast tier) or inter-host groups (the
+    slow tier) — on the full row-sharded N x N matrix, so the sample's
+    byte count is the per-exchange tier volume ``dist_comm_bytes(...,
+    hosts=, exchange="hier")`` predicts.  These tier-tagged samples are
+    what ``plan/calibrate.py`` fits the two-tier comm params from.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.pfft_dist import _hier_groups  # lazy: core imports plan
+
+    intra, inter = _hier_groups(hosts, local)
+    groups = intra if tier == "intra" else inter
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((n, n))
+                     + 1j * rng.standard_normal((n, n))).astype(dtype))
+    x = jax.device_put(x, NamedSharding(mesh, P(axis_name, None)))
+
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis_name, None),),
+                       out_specs=P(axis_name, None), check_rep=False)
+    def ex(block):
+        return jax.lax.all_to_all(block, axis_name, split_axis=1,
+                                  concat_axis=0, tiled=True,
+                                  axis_index_groups=groups)
+
+    jax.block_until_ready(ex(x))  # compile
+    return min(_timed_min([(tier, ex)], x, rounds).values())
+
+
 def measure_dist_configs(configs: Sequence[PlanConfig | SegmentSchedule],
                          n: int, mesh, axis_name: str = "fft", *,
                          pad_len: int | None = None, dtype=np.complex64,
@@ -561,15 +600,26 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
     if params is None:
         params = CostParams.for_backend()
     comm_bytes = dist_comm_bytes(n, p)
+    from repro.launch.mesh import mesh_host_shape  # lazy: launch is thin
+    hosts, local = mesh_host_shape(mesh, axis_name)
 
     # ``batched`` shapes the segment dispatch plan; the dist pipeline has
     # one whole-block segment per device, so the knob is meaningless here
     # and would only burn finalist slots on identical programs.
     cands = [c for c in candidate_configs(n, pad=pad, d=None, panels=panels)
              if c.batched]
+    if hosts > 1 and local > 1:
+        # Host-major axis: the hierarchical exchange is a real program
+        # alternative — race it as its own config dimension.  (The real
+        # path exchanges padded half-spectrum panels flat-only.)
+        import dataclasses
+        cands += [dataclasses.replace(c, exchange="hier")
+                  for c in cands if not c.real]
     ranked = sorted(
-        ((cfg, estimate_cost(cfg, n=n, fpms=fpms, params=params,
-                             comm_bytes=comm_bytes))
+        ((cfg, estimate_cost(
+            cfg, n=n, fpms=fpms, params=params, comm_bytes=comm_bytes,
+            comm_time_s=dist_comm_time(n, p, params=params, hosts=hosts,
+                                       exchange=cfg.exchange)))
          for cfg in cands),
         key=lambda kv: kv[1])
     info: dict = {
@@ -577,12 +627,13 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
         "ranked": [(cfg.to_dict(), float(c)) for cfg, c in ranked],
         "dist": {
             "devices": p,
+            "hosts": int(hosts),
             "axis_name": axis_name,
             "comm_bytes": float(comm_bytes),
             # Both phases, like the measured sample it is judged against.
-            "comm_time_est_s": float(2.0 * (
-                comm_bytes / params.interconnect_bytes_per_s
-                + (params.comm_latency_s if comm_bytes else 0.0))),
+            "comm_time_est_s": float(2.0 * comm_phase_time(
+                comm_bytes, params.interconnect_bytes_per_s,
+                params.comm_latency_s)),
         },
     }
 
@@ -645,6 +696,33 @@ def tune_dist_config(n: int, mesh, axis_name: str = "fft", *,
     info["dist"]["local_phase_s"] = float(local_s)
     info["dist"]["comm_time_meas_s"] = float(
         max(measured[winner] - 2.0 * local_s, 0.0))
+    info["dist"]["exchange"] = winner.exchange
+    if hosts > 1 and local > 1:
+        # Per-tier samples: one grouped all_to_all per tier, so calibrate
+        # can fit the intra- and inter-host comm params separately.  The
+        # byte counts are the hierarchical per-exchange tier volumes the
+        # same microbench actually moves; ``msgs`` is the slow-tier
+        # message count of the timed launch (the latency multiplier).
+        tiers = dist_comm_bytes(n, p, hosts=hosts, exchange="hier")
+        samples = []
+        for tier, tier_bytes, msgs in (("intra", tiers.intra, 1),
+                                       ("inter", tiers.inter, hosts - 1)):
+            if not tier_bytes:
+                continue
+            try:
+                t = _measure_with_retry(
+                    lambda tier=tier: _measure_tier_exchange(
+                        mesh, axis_name, n, hosts, local, tier, dtype, reps),
+                    measure_retries)
+            except Exception as err:
+                if measure_retries <= 0:
+                    raise
+                info["dist"]["tier_sample_error"] = repr(err)
+                break
+            samples.append({"tier": tier, "bytes": float(tier_bytes),
+                            "msgs": int(msgs), "time_s": float(t)})
+        if samples:
+            info["dist"]["comm_samples"] = samples
     return winner, info
 
 
@@ -768,6 +846,11 @@ def tune_pfft3(n: int, mesh=None,
     if params is None:
         params = CostParams.for_backend()
     comm_bytes = pfft3_comm_bytes(n, c) + pfft3_comm_bytes(n, r)
+    if mesh is not None:
+        from repro.launch.mesh import mesh_host_shape  # lazy: launch is thin
+        host_shapes = {a: mesh_host_shape(mesh, a) for a in axes0}
+    else:
+        host_shapes = {}
 
     # ``batched`` shapes segment dispatch (one whole-pencil segment here)
     # and the pencil pipeline is unfused by construction — both knobs
@@ -775,6 +858,12 @@ def tune_pfft3(n: int, mesh=None,
     cands = [cfg for cfg in candidate_configs(n, pad=pad, d=None,
                                               panels=panels)
              if cfg.batched and not cfg.fused]
+    if any(h > 1 and l > 1 for h, l in host_shapes.values()):
+        # Some orientation puts a host-major axis under the row exchange:
+        # race the hierarchical form as its own config dimension.
+        import dataclasses
+        cands += [dataclasses.replace(cfg, exchange="hier")
+                  for cfg in cands if not cfg.real]
     # Orientation space: which mesh axis plays "row".  On a square mesh
     # (or single host) the transposed program is identical.
     if mesh is not None and r != c:
@@ -786,12 +875,16 @@ def tune_pfft3(n: int, mesh=None,
 
     def est(cfg: PlanConfig, waxes) -> float:
         if waxes is None:
-            r_o, c_o = 1, 1
+            r_o, c_o, h_o = 1, 1, 1
         else:
             r_o = int(mesh.shape[waxes[0]])
             c_o = int(mesh.shape[waxes[1]])
+            # Hosts ride the orientation's row axis (the only exchange
+            # the hierarchical form applies to); a non-host-major row
+            # axis prices — and runs — as flat.
+            h_o = host_shapes[waxes[0]][0]
         return estimate_pfft3_cost(cfg, n=n, r=r_o, c=c_o, params=params,
-                                   pad_len=pad_len)
+                                   pad_len=pad_len, hosts=h_o)
 
     ranked = sorted(((cfg, waxes, est(cfg, waxes))
                      for cfg in cands for waxes in orientations),
@@ -803,13 +896,14 @@ def tune_pfft3(n: int, mesh=None,
                    for cfg, waxes, t in ranked],
         "pfft3": {
             "r": r, "c": c,
+            "hosts": int(host_shapes.get(axes0[0], (1, 1))[0]),
             "axis_names": list(axes0) if mesh is not None else None,
             "comm_bytes": float(comm_bytes),
             "comm_time_est_s": float(
-                sum(b / params.interconnect_bytes_per_s
-                    + params.comm_latency_s
-                    for b in (pfft3_comm_bytes(n, c), pfft3_comm_bytes(n, r))
-                    if b)),
+                sum(comm_phase_time(b, params.interconnect_bytes_per_s,
+                                    params.comm_latency_s)
+                    for b in (pfft3_comm_bytes(n, c),
+                              pfft3_comm_bytes(n, r)))),
         },
     }
 
@@ -903,6 +997,7 @@ def tune_pfft3(n: int, mesh=None,
     info["pfft3"]["local_pass_s"] = float(local_s)
     info["pfft3"]["comm_time_meas_s"] = float(
         max(measured[(wcfg, waxes)] - 3.0 * local_s, 0.0))
+    info["pfft3"]["exchange"] = wcfg.exchange
     return wcfg, waxes, info
 
 

@@ -103,9 +103,20 @@ def partition_digest(d, pad_lengths=None) -> str:
     return format(zlib.crc32(raw), "08x")
 
 
+def _mesh_hosts(mesh, axis_names) -> int:
+    """Host count a mesh's axes span (1 when jax/mesh offer no host
+    structure) — the digest's ``h`` component, derived lazily so a
+    ``devices=``-only digest never has to import jax."""
+    try:
+        from repro.launch.mesh import mesh_host_shape
+        return max(mesh_host_shape(mesh, a)[0] for a in axis_names)
+    except Exception:  # pragma: no cover - defensive: digest must not raise
+        return 1
+
+
 def topology_digest(mesh=None, axis_name="fft", *,
                     devices: int | None = None, platform: str | None = None,
-                    panels=(1,)) -> str:
+                    panels=(1,), hosts: int | None = None) -> str:
     """The ``topology`` field of a distributed wisdom key.
 
     Everything an end-to-end distributed measurement is conditioned on:
@@ -121,19 +132,35 @@ def topology_digest(mesh=None, axis_name="fft", *,
     form is injective against 1-D digests ('+' never appears there) and
     against the transposed mesh (``4xfft_r+2xfft_c != 2xfft_r+4xfft_c``),
     so a plan measured on one pencil shape is never served to another.
+
+    A mesh spanning more than one host prefixes a host-count component:
+    ``2hx4xfft.cpu.k1-2-4`` is two hosts of two devices — comm times on
+    it are two-tier quantities that must not be served to the one-host
+    ``4xfft.cpu.k1-2-4`` (nor to ``4hx4xfft...``).  The prefix's ``<n>h``
+    cannot occur at the head of a single-host digest (those start
+    ``<devices>x``), so multi-host digests are injective against every
+    pre-multi-host form — and single-host digests are *unchanged*, so
+    existing stores keep serving single-host lookups.  ``hosts`` may be
+    passed explicitly (``devices=`` callers); with a mesh it is derived
+    from the device process layout / emulated-host registry.
     """
     if not isinstance(axis_name, str):
         if mesh is None:
             raise ValueError("a multi-axis topology_digest needs mesh=")
+        if hosts is None:
+            hosts = _mesh_hosts(mesh, axis_name)
         axes = "+".join(f"{int(mesh.shape[a])}x{a}" for a in axis_name)
         if platform is None:
             platform = mesh.devices.flat[0].platform
         ks = "-".join(str(int(k)) for k in sorted(set(panels))) or "1"
-        return f"{axes}.{platform}.k{ks}"
+        prefix = f"{int(hosts)}hx" if int(hosts) > 1 else ""
+        return f"{prefix}{axes}.{platform}.k{ks}"
     if devices is None:
         if mesh is None:
             raise ValueError("topology_digest needs a mesh or devices=")
         devices = int(mesh.shape[axis_name])
+    if hosts is None:
+        hosts = _mesh_hosts(mesh, (axis_name,)) if mesh is not None else 1
     if platform is None:
         if mesh is not None and mesh.devices.size:
             platform = mesh.devices.flat[0].platform
@@ -141,7 +168,8 @@ def topology_digest(mesh=None, axis_name="fft", *,
             import jax
             platform = jax.default_backend()
     ks = "-".join(str(int(k)) for k in sorted(set(panels))) or "1"
-    return f"{int(devices)}x{axis_name}.{platform}.k{ks}"
+    prefix = f"{int(hosts)}hx" if int(hosts) > 1 else ""
+    return f"{prefix}{int(devices)}x{axis_name}.{platform}.k{ks}"
 
 
 def _load_doc(path: str) -> tuple[int, dict]:

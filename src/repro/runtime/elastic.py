@@ -77,18 +77,42 @@ def largest_fft_axis(n_devices: int, n: int) -> int:
 
 
 def rebuild_fft_mesh(n: int, devices: Sequence[Any] | None = None, *,
-                     axis_name: str = "fft") -> RebuildResult:
+                     axis_name: str = "fft",
+                     hosts: int | None = None) -> RebuildResult:
     """Rebuild the 1-D PFFT mesh from the surviving devices.
 
     Unlike the (data, model) grids, the FFT axis is additionally capped
     by N's divisibility — 3 survivors for N=64 can only staff a 2-wide
     axis, and the third device is *dropped* (reported, like every other
-    non-filling rebuild)."""
-    devices = list(devices if devices is not None else jax.devices())
+    non-filling rebuild).
+
+    The rebuilt axis is *host-major*: survivors are ordered by
+    ``(process_index, id)`` before the axis is cut, so surviving whole
+    hosts stay contiguous and the hierarchical exchange (and the
+    host-aware topology digest) remain applicable after recovery.
+    ``hosts`` carries the caller's surviving-host count on emulated-host
+    rigs (single process, ``mesh_host_shape`` cannot see real
+    ``process_index`` structure): when it divides the rebuilt axis it is
+    re-registered on the new mesh; when it does not — a *partial* host
+    loss — the axis degrades to flat, which is exactly the topology the
+    re-tune should price.  Either way the reduced topology gets a
+    distinct digest, so the re-plan is a correct wisdom miss, never a
+    stale multi-host hit.
+    """
+    from repro.launch.mesh import (host_major_devices,
+                                   register_emulated_hosts)
+
+    devices = host_major_devices(
+        devices if devices is not None else jax.devices())
     p = largest_fft_axis(len(devices), n)
     grid = np.asarray(devices[:p])
-    return RebuildResult(mesh=Mesh(grid, (axis_name,)), used=p,
-                         dropped=len(devices) - p)
+    mesh = Mesh(grid, (axis_name,))
+    if jax.process_count() == 1:
+        eff = int(hosts) if hosts else 1
+        if eff < 1 or p % eff:
+            eff = 1
+        register_emulated_hosts(mesh, axis_name, eff)
+    return RebuildResult(mesh=mesh, used=p, dropped=len(devices) - p)
 
 
 def reshard(tree: Any, mesh: Mesh, pspecs: Any) -> Any:

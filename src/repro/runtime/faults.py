@@ -35,7 +35,7 @@ import time
 from typing import Callable, Sequence
 
 __all__ = ["DeviceLostError", "FaultInjector", "get_injector", "inject",
-           "repeated", "retry_with_backoff", "corrupt_wisdom",
+           "lost_host", "repeated", "retry_with_backoff", "corrupt_wisdom",
            "locked_wisdom"]
 
 
@@ -50,6 +50,14 @@ class DeviceLostError(RuntimeError):
         self.lost = tuple(int(i) for i in lost)
         super().__init__(message or f"device(s) lost at mesh positions "
                          f"{list(self.lost) or '<unknown>'}")
+
+
+def lost_host(host: int, local: int) -> tuple[int, ...]:
+    """Mesh-axis positions of host ``host`` on a host-major FFT axis with
+    ``local`` devices per host — the ``lost=`` payload of a whole-host
+    ``DeviceLostError``."""
+    host, local = int(host), int(local)
+    return tuple(range(host * local, (host + 1) * local))
 
 
 class FaultInjector:
@@ -100,6 +108,15 @@ class FaultInjector:
             exc = DeviceLostError(lost=lost)
         self._fail_at[int(call)] = exc
         self._record("fail_execute", call=int(call), exc=type(exc).__name__)
+
+    def fail_host(self, call: int, host: int, local: int) -> None:
+        """Make the ``call``-th execute raise ``DeviceLostError`` over a
+        *whole host* of a host-major FFT axis: positions
+        ``host*local .. host*local + local - 1`` (``local`` devices per
+        host).  The whole-host-granular loss is the one the elastic
+        rebuild can keep host-major — the recovery path must re-plan
+        under a reduced host count, not a flat axis."""
+        self.fail_execute(call, lost=lost_host(host, local))
 
     def check_execute(self, call: int) -> None:
         exc = self._fail_at.pop(int(call), None)

@@ -422,8 +422,25 @@ class ResilientPlan:
             survivors = [d for d in axis_devices if d in live]
         if not survivors:
             raise err
+        # Surviving-host hint: when the loss is whole-host-granular under
+        # the old mesh's host-major layout, the rebuilt axis keeps its
+        # (reduced) multi-host shape — a distinct topology digest, so the
+        # re-plan is a correct wisdom miss, never a stale multi-host hit.
+        # A partial host loss breaks host-majority and degrades to flat.
+        from repro.launch.mesh import mesh_host_shape
+        hosts_hint = None
+        h_old, l_old = mesh_host_shape(self.mesh, self.axis_name)
+        if h_old > 1:
+            surv_set = set(survivors)
+            gone = {i for i, d in enumerate(axis_devices)
+                    if d not in surv_set}
+            per_host = [sum(1 for i in gone if i // l_old == h)
+                        for h in range(h_old)]
+            if all(g in (0, l_old) for g in per_host):
+                hosts_hint = sum(1 for g in per_host if g == 0)
         rebuilt = rebuild_fft_mesh(self.n, survivors,
-                                   axis_name=self.axis_name)
+                                   axis_name=self.axis_name,
+                                   hosts=hosts_hint)
         kept = [i for i in range(old_p) if i not in lost][:rebuilt.used]
         self.mesh = rebuilt.mesh
         if self.fpms is not None and self.fpms.p == old_p:

@@ -90,3 +90,60 @@ def dist_subprocess():
         return proc
 
     return run
+
+
+@pytest.fixture(scope="session")
+def multihost_subprocess():
+    """Run ``script`` as ``procs`` coordinated ``jax.distributed``
+    processes on localhost — the CPU emulation rig for real multi-host
+    topologies (gloo collectives; each process forces ``devices`` local
+    CPU devices, so 2 procs x 2 devices is a genuine 2-host, 4-device
+    cluster with real ``process_index`` structure).
+
+    Every process runs the *same* script under the ``REPRO_MH_*`` env
+    contract (``launch.mesh.init_multihost_from_env``); scripts must call
+    that before any other jax use and print ``sentinel`` from process 0
+    only.  Asserts every process exited 0 and process 0 printed the
+    sentinel; returns the list of (returncode, stdout, stderr).
+    """
+    import socket
+
+    def run(script: str, *, procs: int = 2, devices: int = 2,
+            sentinel: str = "OK", timeout: int = 600) -> list:
+        with socket.socket() as s:
+            s.bind(("localhost", 0))
+            port = s.getsockname()[1]
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       os.environ.get("XLA_FLAGS", ""))
+        workers = []
+        for pid in range(procs):
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={devices}"
+            ).strip()
+            env["PYTHONPATH"] = SRC + os.pathsep * bool(env.get("PYTHONPATH")) \
+                + env.get("PYTHONPATH", "")
+            env["REPRO_MH_COORD"] = f"localhost:{port}"
+            env["REPRO_MH_NPROCS"] = str(procs)
+            env["REPRO_MH_PID"] = str(pid)
+            workers.append(subprocess.Popen(
+                [sys.executable, "-c", script], stdout=subprocess.PIPE,
+                stderr=subprocess.PIPE, text=True, env=env))
+        outs = []
+        try:
+            for p in workers:
+                out, errs = p.communicate(timeout=timeout)
+                outs.append((p.returncode, out, errs))
+        finally:
+            for p in workers:
+                if p.poll() is None:
+                    p.kill()
+        report = "\n".join(
+            f"--- proc {i} (rc={rc}) stdout ---\n{out[-2000:]}\n"
+            f"--- proc {i} stderr ---\n{err[-2000:]}"
+            for i, (rc, out, err) in enumerate(outs))
+        assert all(rc == 0 for rc, _, _ in outs), report
+        assert sentinel in outs[0][1], report
+        return outs
+
+    return run

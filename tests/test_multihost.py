@@ -1,0 +1,467 @@
+"""Multi-host scale-out: hierarchical transpose + two-tier comm model.
+
+Three rigs, in increasing realism:
+
+* plain unit tests — the two-tier byte/latency accounting
+  (``plan.cost``), the tier fit (``plan.calibrate``), the host-aware
+  digest grammar, and the whole-host fault helper need no devices;
+* ``dist_subprocess`` — a single forced-multi-device process with
+  *emulated* host structure (``make_fft_mesh(hosts=...)`` registers it)
+  exercises the hierarchical exchange's bit-identity against the flat
+  transpose and the elastic whole-host recovery path;
+* ``multihost_subprocess`` — 2 real ``jax.distributed`` processes x 2
+  forced devices on localhost (gloo) are a genuine 2-host cluster with
+  real ``process_index`` structure: the acceptance rig for correctness,
+  host-digest wisdom persistence with per-tier comm samples, and
+  zero-re-measurement warm serving.
+"""
+
+import numpy as np
+import pytest
+
+from repro.plan.calibrate import _fit_comm_params, fit_cost_params
+from repro.plan.config import PlanConfig
+from repro.plan.cost import (CommTiers, CostParams, comm_phase_time,
+                             dist_comm_bytes, dist_comm_time, exchange_time)
+from repro.plan.wisdom import topology_digest
+from repro.runtime.faults import lost_host
+
+
+# --------------------------------------------------------------- two tiers
+
+def test_comm_phase_time_guards_latency():
+    # Satellite fix: both tuners' estimate sites price phases through this
+    # one guarded helper — a phase that moves no bytes costs nothing.
+    assert comm_phase_time(0.0, 1e9, 1e-3) == 0.0
+    assert comm_phase_time(1e9, 1e9, 1e-3) == pytest.approx(1.0 + 1e-3)
+
+
+def test_dist_comm_bytes_legacy_form_unchanged():
+    # hosts=None keeps the single-tier float the pinned tests rely on.
+    assert dist_comm_bytes(64, 4) == 64 * 64 * 8 * 3 / 4
+    assert dist_comm_bytes(64, 1) == 0.0
+
+
+def test_dist_comm_bytes_tier_split():
+    m = 64 * 64 * 8  # whole-matrix bytes, p = 4 = 2 hosts x 2 local
+    flat = dist_comm_bytes(64, 4, hosts=2, exchange="flat")
+    hier = dist_comm_bytes(64, 4, hosts=2, exchange="hier")
+    assert isinstance(flat, CommTiers) and isinstance(hier, CommTiers)
+    # Flat: of the moved (p-1)/p, the (l-1)/p stays intra-host.
+    assert flat.intra == pytest.approx(m * 1 / 4)
+    assert flat.inter == pytest.approx(m * 2 / 4)
+    # Hier: the intra stage aggregates M(l-1)/l; the slow-tier volume is
+    # identical to flat — hierarchy trades intra volume for fewer
+    # inter-host messages, never for fewer inter-host bytes.
+    assert hier.intra == pytest.approx(m * 1 / 2)
+    assert hier.inter == pytest.approx(m * 2 / 4)
+    assert hier.inter == flat.inter
+    # Degenerate axes carry no inter tier.
+    assert dist_comm_bytes(64, 4, hosts=1, exchange="flat").inter == 0.0
+    assert dist_comm_bytes(63, 3, hosts=2, exchange="flat").inter == 0.0
+
+
+def test_exchange_time_single_host_reduces_to_legacy():
+    params = CostParams.for_backend("cpu")
+    total = dist_comm_bytes(64, 4)
+    assert exchange_time(total, 4, params=params, hosts=1) == pytest.approx(
+        comm_phase_time(total, params.interconnect_bytes_per_s,
+                        params.comm_latency_s))
+
+
+def test_exchange_time_hier_wins_on_latency_bound_topologies():
+    # 2 hosts x 4 local: flat sends p-l = 4 inter-host messages per
+    # device, hier sends h-1 = 1 — with a latency-dominated slow tier the
+    # hierarchical exchange must price cheaper, and with a
+    # bandwidth-dominated one its extra intra volume must make it lose.
+    import dataclasses
+    lat_bound = dataclasses.replace(CostParams.for_backend("cpu"),
+                                    inter_latency_s=1e-2,
+                                    inter_bytes_per_s=1e12)
+    bw_bound = dataclasses.replace(CostParams.for_backend("cpu"),
+                                   inter_latency_s=0.0,
+                                   interconnect_bytes_per_s=1e9)
+    total = dist_comm_bytes(256, 8)
+    t_flat = exchange_time(total, 8, params=lat_bound, hosts=2,
+                           exchange="flat")
+    t_hier = exchange_time(total, 8, params=lat_bound, hosts=2,
+                           exchange="hier")
+    assert t_hier < t_flat
+    t_flat = exchange_time(total, 8, params=bw_bound, hosts=2,
+                           exchange="flat")
+    t_hier = exchange_time(total, 8, params=bw_bound, hosts=2,
+                           exchange="hier")
+    assert t_flat < t_hier
+
+
+def test_dist_comm_time_matches_manual_tier_sum():
+    params = CostParams.for_backend("cpu")
+    tiers = dist_comm_bytes(64, 4, hosts=2, exchange="hier")
+    expect = (comm_phase_time(tiers.intra, params.interconnect_bytes_per_s,
+                              params.comm_latency_s)
+              + tiers.inter / params.inter_bytes_per_s
+              + 1 * params.inter_latency_s)
+    got = dist_comm_time(64, 4, params=params, hosts=2, exchange="hier")
+    assert got == pytest.approx(expect)
+
+
+def test_plan_config_exchange_knob():
+    assert PlanConfig().exchange == "flat"
+    assert "exch=hier" in PlanConfig(exchange="hier").describe()
+    assert "exch" not in PlanConfig().describe()
+    with pytest.raises(ValueError):
+        PlanConfig(exchange="diagonal")
+    cfg = PlanConfig.from_dict(PlanConfig(exchange="hier").to_dict())
+    assert cfg.exchange == "hier"
+
+
+def test_spmd_program_rejects_mixed_exchange():
+    from repro.plan.groups import spmd_program_config
+    from repro.plan.schedule import SegmentSchedule
+
+    sched = SegmentSchedule.from_parts(
+        64, [32, 32], None,
+        [PlanConfig(exchange="flat"), PlanConfig(exchange="hier")])
+    with pytest.raises(ValueError, match="SPMD"):
+        spmd_program_config(sched)
+
+
+# --------------------------------------------------------------- tier fit
+
+def _tier_entry(n: int, true: dict) -> dict:
+    m = n * n * 8.0
+    intra_b, inter_b = m / 2, m / 2   # h = l = 2
+    return {
+        "time_s": 1.0, "config": {"pad": "none"}, "hosts": 2,
+        "comm_samples": [
+            {"tier": "intra", "bytes": intra_b, "msgs": 1,
+             "time_s": true["intra_lat"] + intra_b / true["intra_bw"]},
+            {"tier": "inter", "bytes": inter_b, "msgs": 1,
+             "time_s": true["inter_lat"] + inter_b / true["inter_bw"]},
+        ],
+    }
+
+
+def test_fit_comm_params_recovers_two_tiers():
+    true = dict(intra_bw=1e10, intra_lat=1e-5, inter_bw=1e9, inter_lat=1e-3)
+    entries = {
+        f"n={n}|dtype=complex64|p=4|method=lb|backend=cpu"
+        f"|topo=2hx4xfft.cpu.k1": _tier_entry(n, true)
+        for n in (256, 512, 1024)}
+    fitted = _fit_comm_params(entries, "cpu", CostParams.for_backend("cpu"))
+    assert fitted.interconnect_bytes_per_s == pytest.approx(true["intra_bw"])
+    assert fitted.comm_latency_s == pytest.approx(true["intra_lat"])
+    assert fitted.inter_bytes_per_s == pytest.approx(true["inter_bw"])
+    assert fitted.inter_latency_s == pytest.approx(true["inter_lat"])
+    # Two genuinely distinct tiers came out of one store.
+    assert fitted.inter_bytes_per_s != fitted.interconnect_bytes_per_s
+
+
+def test_fit_cost_params_store_dict_two_tiers():
+    # The public entry point, fed a store dict: the tier fit rides along
+    # even below the compute-fit min_entries threshold.
+    true = dict(intra_bw=2e10, intra_lat=2e-5, inter_bw=2e9, inter_lat=2e-3)
+    entries = {
+        f"n={n}|dtype=complex64|p=4|method=lb|backend=cpu"
+        f"|topo=2hx4xfft.cpu.k1": _tier_entry(n, true)
+        for n in (256, 512)}
+    fitted = fit_cost_params(entries, backend="cpu")
+    assert fitted.inter_bytes_per_s == pytest.approx(true["inter_bw"])
+    assert fitted.interconnect_bytes_per_s == pytest.approx(true["intra_bw"])
+
+
+def test_fit_comm_params_legacy_samples_feed_intra_tier():
+    params = CostParams.for_backend("cpu")
+    true_bw, true_lat = 5e9, 1e-4
+    entries = {}
+    for n in (256, 512, 1024):
+        b = dist_comm_bytes(n, 4)
+        entries[f"n={n}|dtype=complex64|p=4|method=lb|backend=cpu"
+                f"|topo=4xfft.cpu.k1"] = {
+            "time_s": 1.0, "config": {"pad": "none"},
+            "comm_bytes": b,
+            "comm_time_s": 2.0 * (true_lat + b / true_bw)}
+    fitted = _fit_comm_params(entries, "cpu", params)
+    assert fitted.interconnect_bytes_per_s == pytest.approx(true_bw)
+    assert fitted.comm_latency_s == pytest.approx(true_lat)
+    # No inter samples: the inter tier keeps its defaults untouched.
+    assert fitted.inter_bytes_per_s == params.inter_bytes_per_s
+    assert fitted.inter_latency_s == params.inter_latency_s
+
+
+# ------------------------------------------------------------ digest + faults
+
+def test_topology_digest_hosts_component():
+    assert topology_digest(None, "fft", devices=4, platform="cpu",
+                           panels=(1, 2, 4), hosts=2) == "2hx4xfft.cpu.k1-2-4"
+    # hosts<=1 keeps the exact single-host grammar (old stores keep
+    # serving single-host lookups).
+    assert topology_digest(None, "fft", devices=4, platform="cpu",
+                           panels=(1, 2, 4), hosts=1) == "4xfft.cpu.k1-2-4"
+    assert topology_digest(None, "fft", devices=4, platform="cpu",
+                           panels=(1, 2, 4)) == "4xfft.cpu.k1-2-4"
+
+
+def test_lost_host_positions():
+    assert lost_host(0, 4) == (0, 1, 2, 3)
+    assert lost_host(2, 2) == (4, 5)
+
+
+# ----------------------------------------------- emulated-host subprocess rig
+
+_IDENT_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.launch.mesh import make_fft_mesh, make_pfft3_mesh, mesh_host_shape
+from repro.core.pfft_dist import pfft2_distributed
+from repro.core.pfft3d import pfft3_pencil, pfft3_slab
+from repro.plan.config import PlanConfig
+
+rng = np.random.default_rng(0)
+n = 64
+x = jnp.asarray((rng.standard_normal((n, n))
+                 + 1j * rng.standard_normal((n, n))).astype("complex64"))
+ref = np.fft.fft2(np.asarray(x))
+
+mesh_h = make_fft_mesh(hosts=2, local=4)
+assert mesh_host_shape(mesh_h, "fft") == (2, 4)
+mesh_f = make_fft_mesh(8)
+assert mesh_host_shape(mesh_f, "fft") == (1, 8)
+
+for kwargs in ({}, {"pipeline_panels": 2}, {"fused": True}):
+    yf = pfft2_distributed(x, mesh=mesh_f,
+                           config=PlanConfig(exchange="flat", **kwargs))
+    yh = pfft2_distributed(x, mesh=mesh_h,
+                           config=PlanConfig(exchange="hier", **kwargs))
+    np.testing.assert_allclose(np.asarray(yh), ref, atol=1e-2)
+    # The hierarchical transpose is the same permutation, not merely
+    # close: two grouped stages compose to exactly the flat all_to_all.
+    assert np.array_equal(np.asarray(yf), np.asarray(yh)), kwargs
+
+# hier on a mesh without host structure degrades to flat, stays correct
+yd = pfft2_distributed(x, mesh=mesh_f, config=PlanConfig(exchange="hier"))
+np.testing.assert_allclose(np.asarray(yd), ref, atol=1e-2)
+
+# the real distributed path is flat-only, by named error
+from repro.core.pfft_dist import rpfft2_distributed
+try:
+    rpfft2_distributed(jnp.ones((n, n), "float32"), mesh_h,
+                       config=PlanConfig(real=True, exchange="hier"))
+except ValueError as err:
+    assert "flat" in str(err)
+else:
+    raise AssertionError("real+hier must be rejected")
+
+n3 = 16
+x3 = jnp.asarray((rng.standard_normal((n3, n3, n3))
+                  + 1j * rng.standard_normal((n3, n3, n3))
+                  ).astype("complex64"))
+ref3 = np.fft.fftn(np.asarray(x3))
+m3h = make_pfft3_mesh(r=4, c=2, hosts=2)
+assert mesh_host_shape(m3h, "fft_r") == (2, 2)
+m3f = make_pfft3_mesh(r=4, c=2)
+zf = pfft3_pencil(x3, mesh=m3f, config=PlanConfig(exchange="flat"))
+zh = pfft3_pencil(x3, mesh=m3h, config=PlanConfig(exchange="hier"))
+np.testing.assert_allclose(np.asarray(zh), ref3, atol=1e-2)
+assert np.array_equal(np.asarray(zf), np.asarray(zh))
+sf = pfft3_slab(x3, mesh=make_fft_mesh(8), config=PlanConfig())
+sh = pfft3_slab(x3, mesh=make_fft_mesh(hosts=2, local=4),
+                config=PlanConfig(exchange="hier"))
+np.testing.assert_allclose(np.asarray(sh), ref3, atol=1e-2)
+assert np.array_equal(np.asarray(sf), np.asarray(sh))
+print("HIER_IDENT_OK")
+"""
+
+
+def test_hier_exchange_bit_identical_to_flat(dist_subprocess):
+    dist_subprocess(_IDENT_SCRIPT, devices=8, sentinel="HIER_IDENT_OK")
+
+
+_TUNE_SCRIPT = r"""
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.launch.mesh import make_fft_mesh
+from repro.core.pfft_dist import pfft2_distributed
+from repro.plan.tune import tune_dist_config
+
+W = "WISDOM_PATH"
+n = 64
+mesh = make_fft_mesh(hosts=2, local=2)
+
+# The race includes the hierarchical exchange as a config dimension.
+cfg, info = tune_dist_config(n, mesh, mode="measure", reps=2)
+assert {r[0]["exchange"] for r in info["ranked"]} == {"flat", "hier"}
+assert info["dist"]["hosts"] == 2
+samples = info["dist"]["comm_samples"]
+assert {s["tier"] for s in samples} == {"intra", "inter"}
+assert all(s["time_s"] > 0 and s["bytes"] > 0 for s in samples)
+
+# The raw-call resolver persists host digest + tier samples...
+rng = np.random.default_rng(0)
+x = jnp.asarray((rng.standard_normal((n, n))
+                 + 1j * rng.standard_normal((n, n))).astype("complex64"))
+y1 = pfft2_distributed(x, mesh=mesh, tune="measure", wisdom=W)
+store = json.load(open(W))
+key = [k for k in store["entries"] if "|topo=2hx4xfft" in k]
+assert key, list(store["entries"])
+entry = store["entries"][key[0]]
+assert entry["hosts"] == 2
+assert {s["tier"] for s in entry["comm_samples"]} == {"intra", "inter"}
+
+# ...and a second plan on the same topology is served with *zero*
+# re-measurement (every measure entry point poisoned).
+import repro.plan.tune as tune_mod
+def boom(*a, **k):
+    raise AssertionError("re-measured a wisdom-served topology")
+tune_mod.measure_dist_configs = boom
+tune_mod._measure_local_phase = boom
+tune_mod._measure_tier_exchange = boom
+y2 = pfft2_distributed(x, mesh=mesh, tune="measure", wisdom=W)
+assert np.allclose(np.asarray(y1), np.asarray(y2))
+print("HIER_TUNE_OK")
+"""
+
+
+def test_tuner_races_hier_and_persists_tier_samples(dist_subprocess,
+                                                    tmp_path):
+    script = _TUNE_SCRIPT.replace("WISDOM_PATH",
+                                  str(tmp_path / "wisdom.json"))
+    dist_subprocess(script, devices=4, sentinel="HIER_TUNE_OK")
+
+
+_HOST_LOSS_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.launch.mesh import make_fft_mesh, mesh_host_shape
+from repro.runtime.faults import inject
+from repro.runtime.resilient import ResilientPlan
+
+n = 48
+rng = np.random.default_rng(1)
+x = (rng.standard_normal((n, n))
+     + 1j * rng.standard_normal((n, n))).astype("complex64")
+ref = np.fft.fft2(x)
+
+with inject() as inj:
+    rp = ResilientPlan(n, method="lb", tune="estimate",
+                       mesh=make_fft_mesh(hosts=4, local=2))
+    topo8 = rp.plan.tuning.get("topology")
+    assert topo8.startswith("4hx8x"), topo8
+    out = rp.execute(x)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-2)
+
+    # Whole-host loss: host 3's devices (positions 6, 7) die together.
+    inj.fail_host(rp.calls, 3, 2)
+    out = rp.execute(x)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-2)
+    ev = [e for e in rp.events if e["kind"] == "device_loss"][0]
+    assert ev["lost"] == [6, 7], ev
+    # The rebuilt axis stays host-major at the reduced host count — a
+    # distinct digest, so the re-plan was a correct wisdom miss.
+    assert rp.p == 6
+    assert mesh_host_shape(rp.mesh, "fft") == (3, 2)
+    topo6 = ev["topology"]
+    assert topo6.startswith("3hx6x"), topo6
+
+    # Partial host loss breaks host-majority: the axis degrades to flat.
+    inj.fail_execute(rp.calls, lost=(5,))
+    out = rp.execute(x)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-2)
+    assert rp.p == 4
+    assert mesh_host_shape(rp.mesh, "fft") == (1, 4)
+    ev = [e for e in rp.events if e["kind"] == "device_loss"][1]
+    assert "hx" not in ev["topology"], ev["topology"]
+print("HOST_LOSS_OK")
+"""
+
+
+def test_whole_host_loss_preserves_host_majority(dist_subprocess):
+    dist_subprocess(_HOST_LOSS_SCRIPT, devices=8, sentinel="HOST_LOSS_OK")
+
+
+# ------------------------------------------- real multi-process localhost rig
+
+_MH_ACCEPT_SCRIPT = r"""
+from repro.launch.mesh import init_multihost_from_env
+assert init_multihost_from_env()
+import json, numpy as np, jax, jax.numpy as jnp
+from jax.experimental import multihost_utils
+from repro.launch.mesh import make_fft_mesh, make_pfft3_mesh, mesh_host_shape
+from repro.core.pfft_dist import pfft2_distributed
+from repro.core.pfft3d import pfft3_pencil
+from repro.plan.calibrate import fit_cost_params
+from repro.plan.config import PlanConfig
+
+pid = jax.process_index()
+assert jax.process_count() == 2 and jax.device_count() == 4
+
+mesh = make_fft_mesh(hosts=2, local=2)
+# Real process_index structure, no emulation registry involved.
+assert mesh_host_shape(mesh, "fft") == (2, 2)
+
+n = 64
+rng = np.random.default_rng(0)
+x = jnp.asarray((rng.standard_normal((n, n))
+                 + 1j * rng.standard_normal((n, n))).astype("complex64"))
+ref = np.fft.fft2(np.asarray(x))
+
+yh = pfft2_distributed(x, mesh=mesh, config=PlanConfig(exchange="hier"))
+yf = pfft2_distributed(x, mesh=mesh, config=PlanConfig(exchange="flat"))
+gh = multihost_utils.process_allgather(yh, tiled=True)
+gf = multihost_utils.process_allgather(yf, tiled=True)
+np.testing.assert_allclose(np.asarray(gh), ref, atol=1e-2)
+assert np.array_equal(np.asarray(gf), np.asarray(gh))
+
+n3 = 16
+x3 = jnp.asarray((rng.standard_normal((n3, n3, n3))
+                  + 1j * rng.standard_normal((n3, n3, n3))
+                  ).astype("complex64"))
+m3 = make_pfft3_mesh(r=4, c=1, hosts=2)
+assert mesh_host_shape(m3, "fft_r") == (2, 2)
+z = pfft3_pencil(x3, mesh=m3, config=PlanConfig(exchange="hier"))
+gz = multihost_utils.process_allgather(z, tiled=True)
+np.testing.assert_allclose(np.asarray(gz), np.fft.fftn(np.asarray(x3)),
+                           atol=1e-2)
+
+# Measured tuning: pin top_k=1 so the deterministic estimate ranking
+# fixes the finalist and every process races — and picks — the same
+# program (divergent winners would diverge the SPMD program).
+import repro.plan.tune as tune_mod
+_tune_orig = tune_mod.tune_dist_config
+def _tune_one(*args, **kw):
+    kw["top_k"] = 1
+    return _tune_orig(*args, **kw)
+tune_mod.tune_dist_config = _tune_one
+
+W = "WISDOM_PATH"
+y1 = pfft2_distributed(x, mesh=mesh, tune="measure", wisdom=W)
+store = json.load(open(W))
+key = [k for k in store["entries"] if "|topo=2hx4xfft" in k]
+assert key, list(store["entries"])
+entry = store["entries"][key[0]]
+assert entry["hosts"] == 2
+assert {s["tier"] for s in entry["comm_samples"]} == {"intra", "inter"}
+
+# Warm serve: zero re-measurement on the same topology.
+def boom(*a, **k):
+    raise AssertionError("re-measured a wisdom-served topology")
+tune_mod.measure_dist_configs = boom
+tune_mod._measure_local_phase = boom
+tune_mod._measure_tier_exchange = boom
+y2 = pfft2_distributed(x, mesh=mesh, tune="measure", wisdom=W)
+g1 = multihost_utils.process_allgather(y1, tiled=True)
+g2 = multihost_utils.process_allgather(y2, tiled=True)
+assert np.allclose(np.asarray(g1), np.asarray(g2))
+
+# The persisted samples calibrate a two-tier CostParams without error.
+fitted = fit_cost_params(W, backend="cpu")
+assert fitted.inter_bytes_per_s > 0 and fitted.interconnect_bytes_per_s > 0
+
+if pid == 0:
+    print("MULTIHOST_ACCEPT_OK")
+"""
+
+
+def test_multihost_acceptance_two_process_rig(multihost_subprocess,
+                                              tmp_path):
+    script = _MH_ACCEPT_SCRIPT.replace("WISDOM_PATH",
+                                       str(tmp_path / "wisdom.json"))
+    multihost_subprocess(script, procs=2, devices=2,
+                         sentinel="MULTIHOST_ACCEPT_OK")

@@ -568,9 +568,13 @@ _KEY_METHODS = ("lb", "fpm", "fpm-pad", "fpm-czt",
 _KEY_BACKENDS = ("cpu", "tpu")
 _KEY_DETAILS = (None, "cafe0123", "70a61b03")
 # The 2-D-mesh digest ('+'-joined per-axis terms) must stay injective
-# against every 1-D digest and against its own transposed mesh.
+# against every 1-D digest and against its own transposed mesh, and the
+# multi-host prefix ("<hosts>hx") against every single-host form and
+# every other host factorization of the same device count.
 _KEY_TOPOS = (None, "2xfft.cpu.k1", "4xfft.cpu.k1-2-4", "4xrows.cpu.k1",
-              "4xfft_r+2xfft_c.cpu.k1-2", "2xfft_r+4xfft_c.cpu.k1-2")
+              "4xfft_r+2xfft_c.cpu.k1-2", "2xfft_r+4xfft_c.cpu.k1-2",
+              "8xfft.cpu.k1-2-4-8", "2hx8xfft.cpu.k1-2-4-8",
+              "4hx8xfft.cpu.k1-2-4-8", "2hx4xfft_r+2xfft_c.cpu.k1-2")
 
 
 def _key_tuple_from_draws(n_i, dtype_i, p, method_i, backend_i, detail_i,
@@ -582,10 +586,10 @@ def _key_tuple_from_draws(n_i, dtype_i, p, method_i, backend_i, detail_i,
 
 @given(a_n=st.integers(0, 2), a_dtype=st.integers(0, 3), a_p=st.integers(1, 8),
        a_method=st.integers(0, 8), a_backend=st.integers(0, 1),
-       a_detail=st.integers(0, 2), a_topo=st.integers(0, 5),
+       a_detail=st.integers(0, 2), a_topo=st.integers(0, 9),
        b_n=st.integers(0, 2), b_dtype=st.integers(0, 3), b_p=st.integers(1, 8),
        b_method=st.integers(0, 8), b_backend=st.integers(0, 1),
-       b_detail=st.integers(0, 2), b_topo=st.integers(0, 5))
+       b_detail=st.integers(0, 2), b_topo=st.integers(0, 9))
 @settings(max_examples=150, deadline=None)
 def test_wisdom_keys_never_collide(a_n, a_dtype, a_p, a_method, a_backend,
                                    a_detail, a_topo, b_n, b_dtype, b_p,
@@ -644,3 +648,32 @@ def test_segment_schedule_roundtrip_is_identity(p, r1, r2, r3, r4, pad_mult,
     # the wire format survives a JSON round trip too (wisdom on disk)
     assert SegmentSchedule.from_dict(
         json.loads(json.dumps(sched.to_dict()))) == sched
+
+
+@settings(max_examples=150, deadline=None)
+@given(a_hosts=st.integers(1, 4), a_local=st.integers(1, 4),
+       b_hosts=st.integers(1, 4), b_local=st.integers(1, 4))
+def test_topology_digest_host_injectivity(a_hosts, a_local,
+                                          b_hosts, b_local):
+    """The host component keeps every (hosts, local) factorization of a
+    device axis distinct — a 2-host x 4-device topology must never be
+    served a 1x8 or 4x2 measurement — while single-host digests keep the
+    exact pre-multi-host grammar, so v3 stores tuned before the host
+    component keep serving single-host lookups."""
+    from repro.plan.wisdom import topology_digest
+
+    def digest(hosts, local):
+        return topology_digest(None, "fft", devices=hosts * local,
+                               platform="cpu", panels=(1,), hosts=hosts)
+
+    da, db = digest(a_hosts, a_local), digest(b_hosts, b_local)
+    assert (da == db) == ((a_hosts, a_local) == (b_hosts, b_local)), \
+        f"{(a_hosts, a_local)} vs {(b_hosts, b_local)}: {da!r} vs {db!r}"
+    if a_hosts == 1:
+        # hosts=1 is the flat axis: the digest is byte-identical to the
+        # host-agnostic form old stores were recorded under.
+        assert da == topology_digest(None, "fft", devices=a_local,
+                                     platform="cpu", panels=(1,))
+        assert "hx" not in da
+    else:
+        assert da.startswith(f"{a_hosts}hx")
